@@ -1,0 +1,38 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import nas, proxy, simulator
+from repro.core.reward import RewardConfig
+
+AREA_T = simulator.BASELINE_AREA_MM2
+
+
+def surrogate():
+    return proxy.SurrogateAccuracy()
+
+
+def timed(fn):
+    t0 = time.monotonic()
+    out = fn()
+    return out, time.monotonic() - t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def best_acc_at(history, lat_budget=None, energy_budget=None):
+    best = 0.0
+    for h in history:
+        if not h.get("valid"):
+            continue
+        if lat_budget is not None and h["latency_ms"] > lat_budget:
+            continue
+        if energy_budget is not None and h["energy_mj"] > energy_budget:
+            continue
+        best = max(best, h["accuracy"])
+    return best

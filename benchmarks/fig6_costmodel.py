@@ -1,0 +1,25 @@
+"""Fig. 6 / Table 2: cost-model accuracy. MLP (3x256, dropout 0.1, Eq.7 λ=10)
+trained on simulator-labelled (α, h) samples; reports latency/area MAPE + R²
+on held-out points (the paper reports 0.4% mean latency-target error for the
+models it selects; our MAPE is over random configs, a harder distribution)."""
+from __future__ import annotations
+
+from repro.core import costmodel, has, nas
+
+
+def run(fast: bool = True) -> dict:
+    n = 1500 if fast else 20_000
+    steps = 3000 if fast else 60_000
+    ns = nas.s1_mobilenetv2()
+    hs = has.has_space()
+    feats, lat, area = costmodel.generate_dataset(ns, hs, n, seed=0)
+    cfg = costmodel.CostModelConfig(steps=steps, batch=128)
+    model, metrics = costmodel.train(feats, lat, area, cfg)
+    return {
+        "metrics": metrics, "n_samples": n, "feature_dim": feats.shape[1],
+        "n_evals": n + steps,
+        "derived": (f"latency MAPE {metrics['val_latency_mape']*100:.1f}% "
+                    f"area MAPE {metrics['val_area_mape']*100:.1f}% "
+                    f"latency R2 {metrics['val_latency_r2']:.3f} "
+                    f"(n={n}, fdim={feats.shape[1]})"),
+    }

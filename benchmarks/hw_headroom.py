@@ -1,0 +1,82 @@
+"""Observation 3 (Sec. 4.4), demonstrated directly: "different neural
+architectures ... lead to drastically different accelerator configurations".
+
+Probes the Table-1 space (3000 samples, area <= baseline) for the best-latency
+config per workload. Expected (and paper-matching) structure:
+  * small/early-fused models  -> more lanes/PEs, LESS local memory
+  * large models (B3-class)   -> MORE local memory (weights must stay
+    resident), fewer compute units
+This is the search-free ceiling analysis backing figs 1/8: the headroom the
+joint search exploits exists in the simulator's hardware space (~2x latency at
+iso-area), independent of any controller's sample efficiency.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import has, simulator
+from repro.models import convnets as C
+
+
+def _scale_model(base: C.ConvNetSpec, width: float) -> C.ConvNetSpec:
+    blocks = tuple(dataclasses.replace(b, filters=int(b.filters * width))
+                   for b in base.blocks)
+    return dataclasses.replace(base, blocks=blocks,
+                               head_filters=int(base.head_filters * width))
+
+
+def best_config_for(spec, n=3000, seed=0, max_io=None):
+    space = has.has_space()
+    rng = np.random.default_rng(seed)
+    area_t = simulator.BASELINE_AREA_MM2
+    best = None
+    for _ in range(n):
+        h = space.decode(space.sample(rng))
+        if simulator.area_mm2(h) > area_t:
+            continue
+        if max_io is not None and h.io_bandwidth_gbps > max_io:
+            continue
+        r = simulator.simulate_safe(spec, h)
+        if r and (best is None or r["latency_ms"] < best[0]):
+            best = (r["latency_ms"], h)
+    return best
+
+
+def run(fast: bool = True) -> dict:
+    n = 2000 if fast else 6000
+    rows = []
+    base_small = C.manual_edgetpu(size="s")
+    base_large = _scale_model(C.efficientnet_b0(se=False, swish=False), 3.0)
+    # two io regimes: unconstrained (headroom magnitude) and io<=10 GB/s
+    # (realistic edge DMA — where the paper's memory-vs-compute trade bites)
+    for io_cap in (None, 10.0):
+        for name, spec in [("small (Manual-EdgeTPU-S)", base_small),
+                           ("large (B0 x3 width)", base_large)]:
+            lat_base = simulator.simulate(spec, has.BASELINE)["latency_ms"]
+            lat_best, h = best_config_for(spec, n=n, max_io=io_cap)
+            rows.append({
+                "workload": name, "io_cap": io_cap,
+                "baseline_ms": lat_base, "best_ms": lat_best,
+                "speedup": lat_base / lat_best,
+                "best_cfg": {
+                    "pes": f"{h.pes_x}x{h.pes_y}", "lanes": h.compute_lanes,
+                    "simd": h.simd_units, "local_mem_mb": h.local_memory_mb,
+                    "io_gbps": h.io_bandwidth_gbps,
+                },
+            })
+    capped = [r for r in rows if r["io_cap"] is not None]
+    small_mem = capped[0]["best_cfg"]["local_mem_mb"]
+    large_mem = capped[1]["best_cfg"]["local_mem_mb"]
+    small_units = capped[0]["best_cfg"]["lanes"] * capped[0]["best_cfg"]["simd"]
+    large_units = capped[1]["best_cfg"]["lanes"] * capped[1]["best_cfg"]["simd"]
+    flip = large_mem > small_mem and small_units > large_units
+    derived = (
+        f"iso-area headroom {rows[0]['speedup']:.2f}x (small) / "
+        f"{rows[1]['speedup']:.2f}x (large); io-capped best configs: "
+        f"small mem={small_mem}MB units={small_units} vs "
+        f"large mem={large_mem}MB units={large_units}"
+        f"{' -- memory/compute flip REPRODUCED (Obs. 3)' if flip else ''}"
+    )
+    return {"rows": rows, "n_evals": 4 * n, "derived": derived}

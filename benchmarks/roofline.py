@@ -1,0 +1,42 @@
+"""§Roofline: read the dry-run artifacts (results/dryrun/*.json) and emit the
+per-(arch × shape) three-term roofline table for the single-pod mesh."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(fast: bool = True, out_dir: str = "results/dryrun") -> dict:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*_single.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec.get("arch"), "shape": rec.get("shape"),
+                         "status": rec.get("status")})
+            continue
+        rl = rec.get("roofline")
+        if not rl:
+            continue
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "compute_ms": rl["compute_s"] * 1e3,
+            "memory_ms": rl["memory_s"] * 1e3,
+            "collective_ms": rl["collective_s"] * 1e3,
+            "dominant": rl["dominant"],
+            "useful_flops_ratio": rl["useful_flops_ratio"],
+            "roofline_fraction": rl["roofline_fraction"],
+        })
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        best = max(ok, key=lambda r: r["roofline_fraction"])
+        derived = (f"{len(ok)} cells analysed; roofline fraction "
+                   f"{worst['roofline_fraction']:.3f} "
+                   f"({worst['arch']}/{worst['shape']}) .. "
+                   f"{best['roofline_fraction']:.3f} "
+                   f"({best['arch']}/{best['shape']})")
+    else:
+        derived = "no dry-run artifacts found — run python -m repro.launch.dryrun"
+    return {"rows": rows, "n_evals": len(rows), "derived": derived}

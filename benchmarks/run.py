@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure (+ the roofline table
+and the beyond-paper pod benchmarks). Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("fig1_energy", "benchmarks.fig1_energy"),
+    ("fig6_costmodel", "benchmarks.fig6_costmodel"),
+    ("fig7_samples", "benchmarks.fig7_samples"),
+    ("fig8_latency", "benchmarks.fig8_latency"),
+    ("fig9_phase", "benchmarks.fig9_phase"),
+    ("table3_sota", "benchmarks.table3_sota"),
+    ("table4_task2", "benchmarks.table4_task2"),
+    ("hw_headroom", "benchmarks.hw_headroom"),
+    ("oneshot", "benchmarks.oneshot_bench"),
+    ("meshsearch", "benchmarks.meshsearch_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sample budgets (slow)")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+
+    import importlib
+    import json
+    import os
+
+    os.makedirs("results/bench", exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = []
+    for name, modname in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            t0 = time.monotonic()
+            out = mod.run(fast=not args.full)
+            dt = time.monotonic() - t0
+            us = dt * 1e6 / max(out.get("n_evals", 1), 1)
+            print(f"{name},{us:.1f},{out['derived']}", flush=True)
+            with open(f"results/bench/{name}.json", "w") as f:
+                json.dump({k: v for k, v in out.items()
+                           if k not in ("supernet_params",)}, f, indent=1,
+                          default=str)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"{name},0,FAILED: {type(e).__name__}: {e}", flush=True)
+            failures.append(name)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

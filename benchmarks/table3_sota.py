@@ -1,0 +1,61 @@
+"""Table 3: accuracy / latency / energy comparison — reference models on the
+baseline accelerator vs NAHAS variants (fixed-accelerator NAS, multi-trial
+joint, oneshot weight-sharing) in the small (0.3ms) and medium (0.5ms)
+regimes. Accuracy signal: calibrated surrogate; latency/energy: simulator."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import AREA_T, surrogate
+from repro.core import has, nas, search, simulator
+from repro.core.reward import RewardConfig
+from repro.models import convnets as C
+
+
+def _named_rows(acc_fn):
+    rows = []
+    for name, spec in [
+        ("EfficientNet-B0 woSE/Swish", C.efficientnet_b0(se=False, swish=False)),
+        ("MobileNetV2", C.mobilenet_v2()),
+        ("Manual-EdgeTPU-S", C.manual_edgetpu(size="s")),
+        ("Manual-EdgeTPU-M", C.manual_edgetpu(size="m")),
+    ]:
+        sim = simulator.simulate(spec, has.BASELINE)
+        rows.append({
+            "model": name, "accuracy": acc_fn(spec),
+            "latency_ms": sim["latency_ms"], "energy_mj": sim["energy_mj"],
+        })
+    return rows
+
+
+def run(fast: bool = True) -> dict:
+    samples = 128 if fast else 1000
+    acc_fn = surrogate()
+    rows = _named_rows(acc_fn)
+    for regime, lt in [("small", 0.3), ("medium", 0.5)]:
+        space = nas.s1_mobilenetv2() if regime == "small" else nas.s3_evolved()
+        rcfg = RewardConfig(latency_target_ms=lt, area_target_mm2=AREA_T)
+        scfg = search.SearchConfig(samples=samples, batch=16, seed=0)
+        fixed = search.fixed_hw_search(space, acc_fn, rcfg, scfg)
+        joint = search.joint_search(space, acc_fn, rcfg, scfg)
+        for label, res in [(f"NAHAS-fixed-acc-{regime}", fixed),
+                           (f"NAHAS-multitrial-{regime}", joint)]:
+            if res.best_record:
+                rows.append({
+                    "model": label,
+                    "accuracy": res.best_record["accuracy"],
+                    "latency_ms": res.best_record["latency_ms"],
+                    "energy_mj": res.best_record["energy_mj"],
+                })
+    joint_small = next((r for r in rows
+                        if r["model"] == "NAHAS-multitrial-small"), None)
+    mbv2 = rows[1]
+    derived = "n/a"
+    if joint_small:
+        derived = (f"NAHAS-small acc {joint_small['accuracy']*100:.2f}% vs "
+                   f"MBV2 {mbv2['accuracy']*100:.2f}% at "
+                   f"{joint_small['latency_ms']:.3f} vs "
+                   f"{mbv2['latency_ms']:.3f} ms; energy "
+                   f"{joint_small['energy_mj']:.3f} vs "
+                   f"{mbv2['energy_mj']:.3f} mJ")
+    return {"rows": rows, "n_evals": 4 * samples, "derived": derived}

@@ -1,0 +1,58 @@
+"""Table 4 (Cityscapes segmentation in the paper): generalization to a second
+task. Stand-in second task: higher-resolution dense-ish workload (larger
+input, different accuracy surrogate scaling) — checks the same ordering the
+paper reports (NAHAS multi-trial beats the fixed baselines; fused-IBN variant
+wins the accuracy-constrained energy comparison)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import AREA_T, surrogate
+from repro.core import has, nas, search, simulator
+from repro.core.reward import RewardConfig
+from repro.models import convnets as C
+
+RES = 512  # dense-prediction-like resolution
+
+
+def run(fast: bool = True) -> dict:
+    samples = 96 if fast else 500
+    acc_fn = surrogate()
+    rows = []
+    for name, spec in [
+        ("EffB0-woSE (task2)", C.efficientnet_b0(se=False, swish=False,
+                                                 image_size=RES)),
+        ("Manual-EdgeTPU-S (task2)", C.manual_edgetpu(size="s",
+                                                      image_size=RES)),
+        ("Manual-EdgeTPU-M (task2)", C.manual_edgetpu(size="m",
+                                                      image_size=RES)),
+    ]:
+        sim = simulator.simulate(spec, has.BASELINE)
+        rows.append({"model": name, "accuracy": acc_fn(spec),
+                     "latency_ms": sim["latency_ms"],
+                     "energy_mj": sim["energy_mj"]})
+    lt = rows[0]["latency_ms"] * 1.05  # paper uses ~3ms class targets
+    for label, space in [("NAHAS-IBN-only (task2)",
+                          nas.s1_mobilenetv2(image_size=RES)),
+                         ("NAHAS-w-fusedIBN (task2)",
+                          nas.s3_evolved(image_size=RES))]:
+        rcfg = RewardConfig(latency_target_ms=lt, area_target_mm2=AREA_T)
+        res = search.joint_search(space, acc_fn, rcfg,
+                                  search.SearchConfig(samples=samples, seed=0))
+        if res.best_record:
+            rows.append({"model": label,
+                         "accuracy": res.best_record["accuracy"],
+                         "latency_ms": res.best_record["latency_ms"],
+                         "energy_mj": res.best_record["energy_mj"]})
+    best_nahas = max((r for r in rows if r["model"].startswith("NAHAS")),
+                     key=lambda r: r["accuracy"], default=None)
+    derived = "n/a"
+    if best_nahas:
+        derived = (f"best NAHAS task2 acc {best_nahas['accuracy']*100:.2f}% "
+                   f"@ {best_nahas['latency_ms']:.2f}ms / "
+                   f"{best_nahas['energy_mj']:.2f}mJ vs Manual-M "
+                   f"{rows[2]['accuracy']*100:.2f}% @ "
+                   f"{rows[2]['latency_ms']:.2f}ms/{rows[2]['energy_mj']:.2f}mJ")
+    return {"rows": rows, "n_evals": 2 * samples, "derived": derived}

@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred steps
+on the synthetic Markov stream, with checkpointing + fault-tolerant resume.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--resume]
+
+The config is a scaled-down qwen3-style decoder (~100M params). Loss drops
+well below the unigram entropy — the stream has real structure to learn.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig, ShapeConfig, TrainConfig
+from repro.data.synthetic import LMStream
+from repro.models import api
+from repro.train.loop import LoopConfig, run_training
+from repro.train.optim import make_optimizer
+from repro.train.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", type=str, default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=512,
+        num_heads=8, num_kv_heads=4, d_ff=2048, vocab_size=32768,
+        use_qk_norm=True,
+    )
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("train", args.seq, args.batch, "train"),
+        train=TrainConfig(total_steps=args.steps, warmup_steps=20,
+                          learning_rate=6e-4, microbatches=2),
+    )
+    step, _, _ = make_train_step(run, None)
+    step = jax.jit(step, donate_argnums=(0,))
+
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params")
+    opt = make_optimizer(run.train)
+    state = {"params": params, "opt": opt.init(params)}
+
+    stream = LMStream(cfg.vocab_size, args.seq, args.batch, seed=0)
+    batch_at = lambda i: {k: jnp.asarray(v)
+                          for k, v in stream.batch_at(i).items()}
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_every=100,
+                      ckpt_dir=args.ckpt, log_every=20)
+    res = run_training(step, state, batch_at, lcfg)
+    first = res.metrics_history[0]["loss"]
+    last = res.metrics_history[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {res.final_step} steps "
+          f"({len(res.straggler_events)} straggler events)")
+    assert last < first, "training failed to learn"
+
+
+if __name__ == "__main__":
+    main()

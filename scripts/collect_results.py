@@ -1,0 +1,77 @@
+"""Render the §Dry-run / §Roofline markdown tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python scripts/collect_results.py [--dir results/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+
+from repro import configs
+from repro.config import SHAPES
+
+
+def fmt_bytes(n):
+    return f"{n/2**30:.2f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    recs = {}
+    for path in glob.glob(os.path.join(args.dir, "*.json")):
+        base = os.path.basename(path)[:-5]
+        recs[base] = json.load(open(path))
+
+    print("### §Dry-run (per-device bytes, both meshes)\n")
+    print("| arch | shape | mesh | status | args GiB | temp GiB | compile s |"
+          " collectives (count) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in configs.ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                tag = f"{arch}_{shape}_{mesh}"
+                r = recs.get(tag)
+                if r is None:
+                    continue
+                if r.get("status") != "ok":
+                    print(f"| {arch} | {shape} | {r.get('mesh','?')} | "
+                          f"{r['status']} | | | | |")
+                    continue
+                mm = r["memory_analysis"]
+                coll = r.get("raw_collectives", r.get("collectives", {}))
+                cc = coll.get("counts", {})
+                cstr = " ".join(f"{k.split('-')[-1]}:{v}" for k, v in
+                                sorted(cc.items()))
+                print(f"| {arch} | {shape} | {r['mesh']} | ok | "
+                      f"{fmt_bytes(mm.get('argument_size_in_bytes',0))} | "
+                      f"{fmt_bytes(mm.get('temp_size_in_bytes',0))} | "
+                      f"{r.get('compile_s',0):.0f} | {cstr} |")
+
+    print("\n### §Roofline (single-pod, loop-calibrated)\n")
+    print("| arch | shape | compute ms | memory ms | collective ms | dominant"
+          " | useful-FLOPs ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in configs.ARCHS:
+        for shape in SHAPES:
+            tag = f"{arch}_{shape}_single"
+            r = recs.get(tag)
+            if r is None:
+                continue
+            if r.get("status") != "ok":
+                print(f"| {arch} | {shape} | {r['status']} | | | | | |")
+                continue
+            rl = r.get("roofline")
+            if not rl:
+                continue
+            print(f"| {arch} | {shape} | {rl['compute_s']*1e3:.1f} | "
+                  f"{rl['memory_s']*1e3:.1f} | {rl['collective_s']*1e3:.1f} | "
+                  f"{rl['dominant'].replace('_s','')} | "
+                  f"{rl['useful_flops_ratio']:.2f} | "
+                  f"{rl['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

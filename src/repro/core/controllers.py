@@ -1,0 +1,234 @@
+"""Search controllers.
+
+* ``PPOController`` — the paper's multi-trial controller (Sec. 3.5.1):
+  clipped-surrogate PPO over a factorized-categorical policy (one softmax per
+  decision point), Adam lr 5e-4, gradient clip 1.0, rewards averaged over
+  trials. "We choose PPO as it is tested by time."
+* ``ReinforceController`` — the oneshot controller (Sec. 3.5.2, following
+  TuNAS): REINFORCE with an exponential-moving-average baseline (momentum
+  0.95), Adam lr 0.0048, optional absolute-reward transform.
+* ``EvolutionController`` — regularized evolution (beyond-paper baseline for
+  the ablation).
+
+All controllers speak integer decision vectors (see core.space.Space).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.space import Space
+
+
+def _init_logits(space: Space) -> list[jnp.ndarray]:
+    return [jnp.zeros((len(c),), jnp.float32) for c in space.choices]
+
+
+def _sample_from_logits(logits, rng: np.random.Generator) -> np.ndarray:
+    out = []
+    for lg in logits:
+        p = np.asarray(jax.nn.softmax(lg))
+        out.append(rng.choice(len(p), p=p / p.sum()))
+    return np.array(out, np.int32)
+
+
+def _logp(logits, vec) -> jnp.ndarray:
+    lp = 0.0
+    for lg, v in zip(logits, vec):
+        lp = lp + jax.nn.log_softmax(lg)[v]
+    return lp
+
+
+class _Adam:
+    def __init__(self, params, lr):
+        self.lr = lr
+        self.m = jax.tree.map(jnp.zeros_like, params)
+        self.v = jax.tree.map(jnp.zeros_like, params)
+        self.t = 0
+
+    def step(self, params, grads, clip: Optional[float] = None):
+        if clip is not None:
+            gn = jnp.sqrt(
+                sum(jnp.sum(g**2) for g in jax.tree.leaves(grads)) + 1e-12
+            )
+            scale = jnp.minimum(1.0, clip / gn)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        self.t += 1
+        self.m = jax.tree.map(lambda m, g: 0.9 * m + 0.1 * g, self.m, grads)
+        self.v = jax.tree.map(lambda v, g: 0.999 * v + 0.001 * g**2, self.v, grads)
+        bc1 = 1 - 0.9**self.t
+        bc2 = 1 - 0.999**self.t
+        return jax.tree.map(
+            lambda p, m, v: p - self.lr * (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8),
+            params, self.m, self.v,
+        )
+
+
+@dataclasses.dataclass
+class PPOConfig:
+    lr: float = 5e-4
+    clip_eps: float = 0.2
+    epochs: int = 3
+    entropy_coef: float = 1e-3
+    grad_clip: float = 1.0
+    trials_per_sample: int = 1  # paper: reward = mean of 10 trials
+
+
+class PPOController:
+    def __init__(self, space: Space, cfg: PPOConfig = PPOConfig(), seed: int = 0):
+        self.space = space
+        self.cfg = cfg
+        self.logits = _init_logits(space)
+        self.opt = _Adam(self.logits, cfg.lr)
+        self.rng = np.random.default_rng(seed)
+        self.baseline = 0.0
+        self._b_init = False
+
+    def sample(self, n: int) -> np.ndarray:
+        return np.stack([_sample_from_logits(self.logits, self.rng)
+                         for _ in range(n)])
+
+    def update(self, vecs: np.ndarray, rewards: np.ndarray):
+        rewards = np.asarray(rewards, np.float32)
+        if not self._b_init:
+            self.baseline = float(rewards.mean())
+            self._b_init = True
+        adv = rewards - self.baseline
+        if adv.std() > 1e-8:
+            adv = adv / (adv.std() + 1e-8)
+        self.baseline = 0.9 * self.baseline + 0.1 * float(rewards.mean())
+        old_lp = np.array(
+            [float(_logp(self.logits, v)) for v in vecs], np.float32
+        )
+        vecs_j = jnp.asarray(vecs)
+        adv_j = jnp.asarray(adv)
+        old_j = jnp.asarray(old_lp)
+
+        if not hasattr(self, "_grad_fn"):
+            clip_eps, ent_coef = self.cfg.clip_eps, self.cfg.entropy_coef
+
+            def loss_fn(logits, vecs_j, adv_j, old_j):
+                lps = []
+                ent = 0.0
+                for i, lg in enumerate(logits):
+                    lsm = jax.nn.log_softmax(lg)
+                    lps.append(lsm[vecs_j[:, i]])
+                    ent = ent + (-jnp.sum(jnp.exp(lsm) * lsm))
+                lp = sum(lps)
+                ratio = jnp.exp(lp - old_j)
+                clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps)
+                obj = jnp.mean(jnp.minimum(ratio * adv_j, clipped * adv_j))
+                return -(obj + ent_coef * ent / len(logits))
+
+            self._grad_fn = jax.jit(jax.grad(loss_fn))
+        for _ in range(self.cfg.epochs):
+            grads = self._grad_fn(self.logits, vecs_j, adv_j, old_j)
+            self.logits = self.opt.step(self.logits, grads,
+                                        clip=self.cfg.grad_clip)
+
+    def best(self) -> np.ndarray:
+        return np.array([int(jnp.argmax(lg)) for lg in self.logits], np.int32)
+
+
+@dataclasses.dataclass
+class ReinforceConfig:
+    lr: float = 0.0048
+    baseline_momentum: float = 0.95
+    entropy_coef: float = 1e-4
+    absolute_reward: bool = True  # TuNAS |r - baseline| shaping
+
+
+class ReinforceController:
+    def __init__(self, space: Space, cfg: ReinforceConfig = ReinforceConfig(),
+                 seed: int = 0):
+        self.space = space
+        self.cfg = cfg
+        self.logits = _init_logits(space)
+        self.opt = _Adam(self.logits, cfg.lr)
+        self.rng = np.random.default_rng(seed)
+        self.baseline = None
+
+    def sample(self, n: int = 1) -> np.ndarray:
+        return np.stack([_sample_from_logits(self.logits, self.rng)
+                         for _ in range(n)])
+
+    def update(self, vecs: np.ndarray, rewards: np.ndarray):
+        rewards = np.asarray(rewards, np.float32)
+        if self.baseline is None:
+            self.baseline = float(rewards.mean())
+        adv = rewards - self.baseline
+        m = self.cfg.baseline_momentum
+        self.baseline = m * self.baseline + (1 - m) * float(rewards.mean())
+        vecs_j = jnp.asarray(vecs)
+        adv_j = jnp.asarray(adv)
+
+        if not hasattr(self, "_grad_fn"):
+            ent_coef = self.cfg.entropy_coef
+
+            def loss_fn(logits, vecs_j, adv_j):
+                lp = 0.0
+                ent = 0.0
+                for i, lg in enumerate(logits):
+                    lsm = jax.nn.log_softmax(lg)
+                    lp = lp + lsm[vecs_j[:, i]]
+                    ent = ent + (-jnp.sum(jnp.exp(lsm) * lsm))
+                return -(jnp.mean(lp * adv_j) + ent_coef * ent / len(logits))
+
+            self._grad_fn = jax.jit(jax.grad(loss_fn))
+        grads = self._grad_fn(self.logits, vecs_j, adv_j)
+        self.logits = self.opt.step(self.logits, grads, clip=1.0)
+
+    def best(self) -> np.ndarray:
+        return np.array([int(jnp.argmax(lg)) for lg in self.logits], np.int32)
+
+
+@dataclasses.dataclass
+class EvolutionConfig:
+    population: int = 64
+    tournament: int = 8
+    mutate_rate: float = 0.1
+
+
+class EvolutionController:
+    """Regularized evolution (ablation baseline)."""
+
+    def __init__(self, space: Space, cfg: EvolutionConfig = EvolutionConfig(),
+                 seed: int = 0):
+        self.space = space
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        self.population: list[tuple[np.ndarray, float]] = []
+
+    def sample(self, n: int = 1) -> np.ndarray:
+        out = []
+        for _ in range(n):
+            if len(self.population) < self.cfg.population:
+                out.append(self.space.sample(self.rng))
+            else:
+                idx = self.rng.choice(len(self.population),
+                                      size=self.cfg.tournament, replace=False)
+                parent = max((self.population[i] for i in idx),
+                             key=lambda t: t[1])[0]
+                out.append(self.space.mutate(parent, self.rng,
+                                             self.cfg.mutate_rate))
+        return np.stack(out)
+
+    def update(self, vecs: np.ndarray, rewards: np.ndarray):
+        for v, r in zip(vecs, rewards):
+            self.population.append((np.asarray(v), float(r)))
+            if len(self.population) > self.cfg.population:
+                self.population.pop(0)  # age-regularized: drop oldest
+
+    def best(self) -> np.ndarray:
+        return max(self.population, key=lambda t: t[1])[0]
+
+
+CONTROLLERS = {
+    "ppo": PPOController,
+    "reinforce": ReinforceController,
+    "evolution": EvolutionController,
+}

@@ -1,0 +1,189 @@
+"""The latency/area cost model (paper Sec. 3.5.2, Fig. 6, Table 2).
+
+A 3-layer MLP (hidden 256, ReLU, dropout 0.1) over the one-hot features of the
+joint (α, h) configuration, with two heads sharing the trunk ("the area
+predictor and latency predictor largely share parameters with only separate
+parameterization in the prediction heads"):
+
+    Loss = MSE(area) + λ · MSE(latency),  λ = 10        (Eq. 7)
+
+Training data is labelled by the analytical simulator ("labelled data for
+accelerator performance is much cheaper than labelled data for NAS accuracy").
+Targets are log-transformed + standardized internally; reported metrics are
+relative errors in the original units.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import has as has_lib
+from repro.core import simulator
+from repro.core.space import Space
+
+
+@dataclasses.dataclass
+class CostModelConfig:
+    hidden: int = 256
+    layers: int = 3
+    dropout: float = 0.1
+    lr: float = 1e-3
+    batch: int = 128
+    steps: int = 20_000
+    lam: float = 10.0  # Eq. 7 λ
+    seed: int = 0
+
+
+def init_mlp(rng, in_dim: int, cfg: CostModelConfig) -> dict:
+    dims = [in_dim] + [cfg.hidden] * cfg.layers
+    params = {"layers": [], "head_lat": None, "head_area": None}
+    ks = jax.random.split(rng, len(dims) + 2)
+    for i in range(len(dims) - 1):
+        w = jax.random.normal(ks[i], (dims[i], dims[i + 1])) * np.sqrt(
+            2.0 / dims[i]
+        )
+        params["layers"].append({"w": w, "b": jnp.zeros((dims[i + 1],))})
+    params["head_lat"] = {
+        "w": jax.random.normal(ks[-2], (cfg.hidden, 1)) * 0.01,
+        "b": jnp.zeros((1,)),
+    }
+    params["head_area"] = {
+        "w": jax.random.normal(ks[-1], (cfg.hidden, 1)) * 0.01,
+        "b": jnp.zeros((1,)),
+    }
+    return params
+
+
+def mlp_forward(params, x, *, dropout_rng=None, dropout=0.0):
+    h = x
+    for lyr in params["layers"]:
+        h = jax.nn.relu(h @ lyr["w"] + lyr["b"])
+        if dropout_rng is not None and dropout > 0:
+            dropout_rng, sub = jax.random.split(dropout_rng)
+            keep = jax.random.bernoulli(sub, 1 - dropout, h.shape)
+            h = jnp.where(keep, h / (1 - dropout), 0.0)
+    lat = (h @ params["head_lat"]["w"] + params["head_lat"]["b"])[:, 0]
+    area = (h @ params["head_area"]["w"] + params["head_area"]["b"])[:, 0]
+    return lat, area
+
+
+@dataclasses.dataclass
+class CostModel:
+    params: dict
+    mu: np.ndarray  # (2,) target means (log space)
+    sigma: np.ndarray
+    feature_fn: Callable[[np.ndarray], np.ndarray]
+
+    def predict(self, feats: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """feats (N, F) -> (latency_ms (N,), area_mm2 (N,))."""
+        lat, area = mlp_forward(self.params, jnp.asarray(feats))
+        lat = np.exp(np.asarray(lat) * self.sigma[0] + self.mu[0])
+        area = np.exp(np.asarray(area) * self.sigma[1] + self.mu[1])
+        return lat, area
+
+
+def generate_dataset(
+    nas_space: Space,
+    has_space: Space,
+    n: int,
+    seed: int = 0,
+    batch_size: int = 1,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Random (α, h) samples labelled by the simulator.
+    Returns (features (N,F), latency_ms (N,), area_mm2 (N,)); invalid configs
+    are resampled (they get reward -1 in the search itself, but the cost model
+    trains on valid points, matching the paper's setup)."""
+    rng = np.random.default_rng(seed)
+    feats, lats, areas = [], [], []
+    while len(feats) < n:
+        av = nas_space.sample(rng)
+        hv = has_space.sample(rng)
+        spec = nas_space.decode(av)
+        h = has_space.decode(hv)
+        res = simulator.simulate_safe(spec, h, batch=batch_size)
+        if res is None:
+            continue
+        feats.append(np.concatenate([nas_space.features(av),
+                                     has_space.features(hv)]))
+        lats.append(res["latency_ms"])
+        areas.append(res["area_mm2"])
+    return np.stack(feats), np.array(lats), np.array(areas)
+
+
+def train(
+    feats: np.ndarray,
+    lat_ms: np.ndarray,
+    area_mm2: np.ndarray,
+    cfg: CostModelConfig = CostModelConfig(),
+    val_frac: float = 0.1,
+) -> tuple[CostModel, dict]:
+    n, fdim = feats.shape
+    n_val = max(1, int(n * val_frac))
+    idx = np.random.default_rng(cfg.seed).permutation(n)
+    tr, va = idx[n_val:], idx[:n_val]
+
+    y = np.stack([np.log(lat_ms), np.log(area_mm2)], axis=1)
+    mu = y[tr].mean(0)
+    sigma = y[tr].std(0) + 1e-8
+    yn = (y - mu) / sigma
+
+    x_tr = jnp.asarray(feats[tr])
+    y_tr = jnp.asarray(yn[tr])
+    x_va = jnp.asarray(feats[va])
+    y_va = jnp.asarray(yn[va])
+
+    rng = jax.random.PRNGKey(cfg.seed)
+    params = init_mlp(rng, fdim, cfg)
+    opt = {"m": jax.tree.map(jnp.zeros_like, params),
+           "v": jax.tree.map(jnp.zeros_like, params)}
+
+    def loss_fn(p, xb, yb, drng):
+        lat, area = mlp_forward(p, xb, dropout_rng=drng, dropout=cfg.dropout)
+        # Eq. 7: MSE(area) + λ MSE(latency)
+        return jnp.mean((area - yb[:, 1]) ** 2) + cfg.lam * jnp.mean(
+            (lat - yb[:, 0]) ** 2
+        )
+
+    @jax.jit
+    def step(p, o, xb, yb, drng, t):
+        loss, g = jax.value_and_grad(loss_fn)(p, xb, yb, drng)
+        m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, o["m"], g)
+        v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_**2, o["v"], g)
+        bc1 = 1 - 0.9**t
+        bc2 = 1 - 0.999**t
+        p = jax.tree.map(
+            lambda p_, m_, v_: p_ - cfg.lr * (m_ / bc1)
+            / (jnp.sqrt(v_ / bc2) + 1e-8),
+            p, m, v)
+        return p, {"m": m, "v": v}, loss
+
+    rng_np = np.random.default_rng(cfg.seed + 1)
+    n_tr = len(tr)
+    for t in range(1, cfg.steps + 1):
+        bi = rng_np.integers(0, n_tr, cfg.batch)
+        drng = jax.random.fold_in(rng, t)
+        params, opt, loss = step(params, opt, x_tr[bi], y_tr[bi], drng,
+                                 jnp.float32(t))
+
+    lat_p, area_p = mlp_forward(params, x_va)
+    lat_pred = np.exp(np.asarray(lat_p) * sigma[0] + mu[0])
+    area_pred = np.exp(np.asarray(area_p) * sigma[1] + mu[1])
+    lat_true = lat_ms[va]
+    area_true = area_mm2[va]
+    metrics = {
+        "val_latency_mape": float(
+            np.mean(np.abs(lat_pred - lat_true) / lat_true)),
+        "val_area_mape": float(
+            np.mean(np.abs(area_pred - area_true) / area_true)),
+        "val_latency_r2": float(
+            1 - np.var(np.log(lat_pred) - np.log(lat_true))
+            / np.var(np.log(lat_true))),
+        "n_train": int(n_tr),
+        "n_val": int(n_val),
+    }
+    model = CostModel(params=params, mu=mu, sigma=sigma, feature_fn=lambda f: f)
+    return model, metrics

@@ -1,0 +1,264 @@
+"""Oneshot NAHAS: joint search with weight sharing (paper Sec. 3.5.2).
+
+A single super-network carries the union of all NAS options; each step samples
+one sub-network (single-path one-shot), trains the shared weights on the proxy
+task, and lets a REINFORCE controller (TuNAS-style: absolute reward, warmup,
+momentum-0.95 baseline) optimize the NAS *and* HAS decision points together.
+Hardware latency/area inside the loop comes from the trained MLP cost model
+(querying the simulator directly "becomes the new bottleneck for NAHAS oneshot
+search" — Sec. 3.5.2), falling back to the simulator when no cost model is
+supplied.
+
+Weight sharing implementation (masked superkernels, static shapes => one jit):
+  * kernel size  — a 7×7 kernel masked down to the sampled 5×5 / 3×3 ring
+  * expansion    — max-expansion channels, channel-masked to the sampled ratio
+  * op type      — IBN and Fused-IBN branches share the block; the sampled
+                   branch is selected by a one-hot multiply
+
+Per the paper's own finding, oneshot targets the *small-model* regime: it
+shares kernel/expansion/op decisions and leaves filter-multiplier/groups to
+the multi-trial path ("constructing a super-network … impractically too
+expensive when the search space is larger").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import replace
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import has as has_lib
+from repro.core import simulator
+from repro.core.controllers import ReinforceConfig, ReinforceController
+from repro.core.reward import RewardConfig, reward as reward_fn
+from repro.core.space import Choice, Space, concat
+from repro.data.synthetic import VisionStream
+from repro.models import convnets as C
+
+
+# ---------------------------------------------------------------------------
+# Oneshot decision space (kernel / expansion / op per block)
+# ---------------------------------------------------------------------------
+
+
+def oneshot_space(base: C.ConvNetSpec) -> Space:
+    choices = []
+    for i, _ in enumerate(base.blocks):
+        choices.append(Choice(f"b{i}_kernel", (3, 5, 7)))
+        if i > 0:
+            choices.append(Choice(f"b{i}_exp", (3, 6)))
+        choices.append(Choice(f"b{i}_op", ("ibn", "fused")))
+
+    def decode(d):
+        blocks = []
+        for i, b in enumerate(base.blocks):
+            blocks.append(replace(
+                b, kernel=d[f"b{i}_kernel"],
+                expansion=d.get(f"b{i}_exp", 1 if i == 0 else b.expansion),
+                op=d[f"b{i}_op"],
+            ))
+        return replace(base, blocks=tuple(blocks))
+
+    return Space(choices, decode, "oneshot")
+
+
+# ---------------------------------------------------------------------------
+# Supernet
+# ---------------------------------------------------------------------------
+
+_MAX_K = 7
+_MAX_EXP = 6
+
+
+def init_supernet(rng, base: C.ConvNetSpec) -> dict:
+    dtype = jnp.float32
+    params = {
+        "stem_w": C._conv_init(rng, 3, 3, 3, base.stem_filters, dtype),
+        "stem_gn": C._gn_init(base.stem_filters, dtype),
+        "blocks": [],
+    }
+    cin = base.stem_filters
+    for i, b in enumerate(base.blocks):
+        mid = cin * _MAX_EXP
+        k = jax.random.fold_in(rng, i)
+        ks = jax.random.split(k, 5)
+        params["blocks"].append({
+            "expand_w": C._conv_init(ks[0], 1, 1, cin, mid, dtype),
+            "expand_gn": C._gn_init(mid, dtype),
+            "dw_w": C._conv_init(ks[1], _MAX_K, _MAX_K, 1, mid, dtype),
+            "dw_gn": C._gn_init(mid, dtype),
+            "fused_w": C._conv_init(ks[2], _MAX_K, _MAX_K, cin, mid, dtype),
+            "fused_gn": C._gn_init(mid, dtype),
+            "project_w": C._conv_init(ks[3], 1, 1, mid, b.filters, dtype),
+            "project_gn": C._gn_init(b.filters, dtype),
+        })
+        cin = b.filters
+    params["head_w"] = C._conv_init(
+        jax.random.fold_in(rng, 999), 1, 1, cin, base.head_filters, dtype)
+    params["head_gn"] = C._gn_init(base.head_filters, dtype)
+    params["classifier"] = (
+        jax.random.normal(jax.random.fold_in(rng, 1000),
+                          (base.head_filters, base.num_classes)) * 0.01
+    )
+    return params
+
+
+def _kernel_mask(k_sel: jax.Array) -> jax.Array:
+    """(7,7) mask selecting the centered k×k window; k_sel is the sampled k."""
+    r = jnp.abs(jnp.arange(_MAX_K) - _MAX_K // 2)
+    ring = jnp.maximum(r[:, None], r[None, :])  # 0..3
+    return (ring <= (k_sel - 1) // 2).astype(jnp.float32)
+
+
+def supernet_forward(
+    params: dict,
+    images: jax.Array,
+    base: C.ConvNetSpec,
+    ks: jax.Array,     # (n_blocks,) sampled kernel sizes
+    exps: jax.Array,   # (n_blocks,) sampled expansions (block 0 value ignored)
+    ops: jax.Array,    # (n_blocks,) 0 = ibn, 1 = fused
+) -> jax.Array:
+    x = C._act(C._gn(params["stem_gn"], C._conv(images, params["stem_w"], 2)),
+               "relu")
+    cin = base.stem_filters
+    for i, b in enumerate(base.blocks):
+        p = params["blocks"][i]
+        mid = cin * _MAX_EXP
+        exp_i = jnp.where(i == 0, 1, exps[i])
+        ch_mask = (jnp.arange(mid) < cin * exp_i).astype(jnp.float32)
+        kmask = _kernel_mask(ks[i])[:, :, None, None]
+        # IBN branch
+        hi = C._act(C._gn(p["expand_gn"], C._conv(x, p["expand_w"], 1)), b.act)
+        hi = hi * ch_mask
+        hi = C._act(C._gn(p["dw_gn"],
+                          C._depthwise(hi, p["dw_w"] * kmask, b.stride)), b.act)
+        # Fused branch
+        hf = C._act(C._gn(p["fused_gn"],
+                          C._conv(x, p["fused_w"] * kmask, b.stride)), b.act)
+        h = jnp.where(ops[i] == 1, hf, hi) * ch_mask
+        h = C._gn(p["project_gn"], C._conv(h, p["project_w"], 1))
+        if b.stride == 1 and cin == b.filters:
+            h = h + x
+        x = h
+        cin = b.filters
+    x = C._act(C._gn(params["head_gn"], C._conv(x, params["head_w"], 1)), "relu")
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["classifier"]
+
+
+# ---------------------------------------------------------------------------
+# The oneshot search loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class OneshotConfig:
+    steps: int = 400
+    warmup_frac: float = 0.25  # weights-only warmup (TuNAS)
+    batch: int = 64
+    lr: float = 0.05
+    image_size: int = 32
+    num_classes: int = 10
+    seed: int = 0
+    controller_every: int = 1
+
+
+def _vec_to_arrays(space: Space, base: C.ConvNetSpec, vec: np.ndarray):
+    d = space.to_dict(vec)
+    n = len(base.blocks)
+    ks = np.array([d[f"b{i}_kernel"] for i in range(n)], np.int32)
+    exps = np.array(
+        [d.get(f"b{i}_exp", 1 if i == 0 else 6) for i in range(n)], np.int32)
+    ops = np.array(
+        [1 if d[f"b{i}_op"] == "fused" else 0 for i in range(n)], np.int32)
+    return ks, exps, ops
+
+
+def oneshot_search(
+    base: C.ConvNetSpec,
+    rcfg: RewardConfig,
+    cfg: OneshotConfig = OneshotConfig(),
+    cost_model=None,
+    has_space: Optional[Space] = None,
+) -> dict:
+    base = replace(base, image_size=cfg.image_size, num_classes=cfg.num_classes)
+    nas_space = oneshot_space(base)
+    has_space = has_space or has_lib.has_space()
+    joint = concat(nas_space, has_space)
+    ctrl = ReinforceController(joint, ReinforceConfig(), seed=cfg.seed)
+    rng_np = np.random.default_rng(cfg.seed)
+
+    params = init_supernet(jax.random.PRNGKey(cfg.seed), base)
+    stream = VisionStream(image_size=cfg.image_size,
+                          num_classes=cfg.num_classes, batch=cfg.batch,
+                          seed=cfg.seed)
+
+    def loss_fn(p, images, labels, ks, exps, ops):
+        logits = supernet_forward(p, images, base, ks, exps, ops)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    @jax.jit
+    def train_one(p, images, labels, ks, exps, ops):
+        loss, g = jax.value_and_grad(loss_fn)(p, images, labels, ks, exps, ops)
+        p = jax.tree.map(lambda w, gw: w - cfg.lr * gw, p, g)
+        return p, loss
+
+    @jax.jit
+    def val_acc(p, images, labels, ks, exps, ops):
+        logits = supernet_forward(p, images, base, ks, exps, ops)
+        return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+    def hw_metrics(av, hv):
+        spec = nas_space.decode(av)
+        h = has_space.decode(hv)
+        if cost_model is not None:
+            feats = np.concatenate([nas_space.features(av),
+                                    has_space.features(hv)])[None]
+            lat, area = cost_model.predict(feats)
+            return float(lat[0]), float(area[0]), spec, h
+        sim = simulator.simulate_safe(spec, h)
+        if sim is None:
+            return None, None, spec, h
+        return sim["latency_ms"], sim["area_mm2"], spec, h
+
+    history = []
+    warmup = int(cfg.steps * cfg.warmup_frac)
+    for step in range(cfg.steps):
+        vec = (joint.sample(rng_np) if step < warmup
+               else ctrl.sample(1)[0])
+        av, hv = vec[: nas_space.num_decisions], vec[nas_space.num_decisions:]
+        ks, exps, ops = _vec_to_arrays(nas_space, base, av)
+        b = stream.batch_at(step)
+        params, loss = train_one(
+            params, jnp.asarray(b["images"]), jnp.asarray(b["labels"]),
+            jnp.asarray(ks), jnp.asarray(exps), jnp.asarray(ops))
+        if step >= warmup and step % cfg.controller_every == 0:
+            vb = stream.batch_at(50_000 + step)
+            acc = float(val_acc(
+                params, jnp.asarray(vb["images"]), jnp.asarray(vb["labels"]),
+                jnp.asarray(ks), jnp.asarray(exps), jnp.asarray(ops)))
+            lat, area, spec, h = hw_metrics(av, hv)
+            r = reward_fn(acc, lat, area, rcfg)
+            ctrl.update(vec[None], np.array([r]))
+            history.append({
+                "step": step, "loss": float(loss), "accuracy": acc,
+                "latency_ms": lat, "area_mm2": area, "reward": float(r),
+                "valid": lat is not None,
+            })
+    best_vec = ctrl.best()
+    av, hv = best_vec[: nas_space.num_decisions], best_vec[nas_space.num_decisions:]
+    return {
+        "best_arch": nas_space.decode(av),
+        "best_hw": has_space.decode(hv),
+        "best_vec": best_vec,
+        "history": history,
+        "supernet_params": params,
+        "nas_space": nas_space,
+        "has_space": has_space,
+    }

@@ -1,0 +1,56 @@
+"""The constrained weighted-product search objective (paper Eq. 4-6):
+
+    max  Accuracy(a,h) * (Latency(a,h)/T_lat)^w0 * (Area(h)/T_area)^w1
+
+    w = p  if the metric meets its target, q otherwise.
+    hard constraint: p=0, q=-1   soft constraint: p=q=-0.07
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class RewardConfig:
+    latency_target_ms: float
+    area_target_mm2: float
+    mode: str = "hard"  # "hard" (p=0,q=-1) | "soft" (p=q=-0.07)
+    # energy-driven variant: swap latency for energy (Sec. 3.4 "can be easily
+    # swapped with an energy constraint")
+    energy_target_mj: Optional[float] = None
+    invalid_reward: float = -1.0
+
+    @property
+    def pq(self) -> tuple[float, float]:
+        return (0.0, -1.0) if self.mode == "hard" else (-0.07, -0.07)
+
+
+def reward(
+    accuracy: float,
+    latency_ms: Optional[float],
+    area_mm2: Optional[float],
+    cfg: RewardConfig,
+    energy_mj: Optional[float] = None,
+) -> float:
+    """Invalid samples (simulator returned None) get cfg.invalid_reward."""
+    if latency_ms is None or area_mm2 is None:
+        return cfg.invalid_reward
+    p, q = cfg.pq
+
+    if cfg.energy_target_mj is not None:
+        perf_ratio = energy_mj / cfg.energy_target_mj
+        perf_ok = energy_mj <= cfg.energy_target_mj
+    else:
+        perf_ratio = latency_ms / cfg.latency_target_ms
+        perf_ok = latency_ms <= cfg.latency_target_ms
+    w0 = p if perf_ok else q
+    area_ratio = area_mm2 / cfg.area_target_mm2
+    w1 = p if area_mm2 <= cfg.area_target_mm2 else q
+
+    r = accuracy
+    if w0 != 0.0:
+        r = r * (perf_ratio ** w0)
+    if w1 != 0.0:
+        r = r * (area_ratio ** w1)
+    return float(r)

@@ -1,0 +1,262 @@
+"""Search drivers (paper Sec. 3.5, 4.4, 4.5).
+
+* ``joint_search``      — NAHAS multi-trial: one controller over the unified
+                          (NAS ++ HAS) space.
+* ``fixed_hw_search``   — platform-aware NAS baseline: HAS frozen (default:
+                          the baseline accelerator).
+* ``phase_search``      — HAS-then-NAS (Fig. 9 baseline): phase 1 searches the
+                          accelerator for a fixed initial architecture with the
+                          SOFT constraint; phase 2 runs NAS on the chosen
+                          accelerator with the HARD constraint.
+* ``nested_search``     — outer HAS loop, small inner NAS per hardware sample.
+
+Every driver returns a ``SearchResult`` whose ``history`` carries one record
+per evaluated sample (accuracy, latency, energy, area, reward, validity) —
+the benchmarks build Figs. 1/7/8/9 and Table 3 from these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import has as has_lib
+from repro.core import simulator
+from repro.core.controllers import CONTROLLERS, PPOController
+from repro.core.reward import RewardConfig, reward as reward_fn
+from repro.core.space import Space, concat
+
+
+@dataclasses.dataclass
+class SearchConfig:
+    samples: int = 500
+    batch: int = 16  # samples per controller update
+    controller: str = "ppo"
+    seed: int = 0
+    proxy_batch: int = 1  # inference batch for the simulator
+    # hot-start the HAS decision logits at the baseline accelerator ("co-search
+    # with hot start", Jiang et al. 2020a — cited in the paper's related work):
+    # at small sample budgets the controller then explores AROUND a known-good
+    # design instead of uniformly over the (mostly invalid) joint space
+    hot_start: bool = True
+    hot_start_logit: float = 1.5
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best_vec: Optional[np.ndarray]
+    best_record: Optional[dict]
+    history: list
+    space: Space
+    wall_s: float
+
+    def pareto(self, x_key="latency_ms", y_key="accuracy") -> list[dict]:
+        pts = [h for h in self.history if h.get("valid")]
+        pts.sort(key=lambda h: h[x_key])
+        out, best_y = [], -np.inf
+        for p in pts:
+            if p[y_key] > best_y:
+                out.append(p)
+                best_y = p[y_key]
+        return out
+
+
+def _evaluate(
+    nas_space: Space,
+    has_space: Optional[Space],
+    vec: np.ndarray,
+    acc_fn: Callable,
+    rcfg: RewardConfig,
+    fixed_h=None,
+    proxy_batch: int = 1,
+) -> dict:
+    if has_space is None:
+        av, hv = vec, None
+        spec = nas_space.decode(av)
+        h = fixed_h
+    else:
+        av, hv = vec[: nas_space.num_decisions], vec[nas_space.num_decisions:]
+        spec = nas_space.decode(av)
+        h = has_space.decode(hv)
+    sim = simulator.simulate_safe(spec, h, batch=proxy_batch)
+    if sim is None:
+        return {
+            "valid": False, "reward": rcfg.invalid_reward, "accuracy": 0.0,
+            "latency_ms": None, "energy_mj": None, "area_mm2": None,
+        }
+    acc = acc_fn(spec)
+    r = reward_fn(acc, sim["latency_ms"], sim["area_mm2"], rcfg,
+                  energy_mj=sim["energy_mj"])
+    meets = sim["latency_ms"] <= rcfg.latency_target_ms and \
+        sim["area_mm2"] <= rcfg.area_target_mm2
+    if rcfg.energy_target_mj is not None:
+        meets = sim["energy_mj"] <= rcfg.energy_target_mj and \
+            sim["area_mm2"] <= rcfg.area_target_mm2
+    return {
+        "valid": True, "meets_constraints": bool(meets), "reward": float(r),
+        "accuracy": float(acc), "latency_ms": float(sim["latency_ms"]),
+        "energy_mj": float(sim["energy_mj"]), "area_mm2": float(sim["area_mm2"]),
+        "utilization": float(sim["utilization"]),
+    }
+
+
+def _drive(space, eval_one, cfg: SearchConfig, warm_has=None) -> SearchResult:
+    ctrl = CONTROLLERS[cfg.controller](space, seed=cfg.seed)
+    if warm_has is not None and hasattr(ctrl, "logits"):
+        import jax.numpy as _jnp
+
+        offset, base_vec, logit = warm_has
+        for i, v in enumerate(base_vec):
+            lg = ctrl.logits[offset + i]
+            ctrl.logits[offset + i] = lg.at[int(v)].set(logit)
+    history = []
+    best = None
+    best_vec = None
+    t0 = time.monotonic()
+    n = 0
+    while n < cfg.samples:
+        batch = min(cfg.batch, cfg.samples - n)
+        vecs = ctrl.sample(batch)
+        rewards = []
+        for v in vecs:
+            rec = eval_one(v)
+            rec["sample_idx"] = n
+            history.append(rec)
+            rewards.append(rec["reward"])
+            if rec["valid"] and rec.get("meets_constraints") and (
+                best is None or rec["reward"] > best["reward"]
+            ):
+                best, best_vec = rec, np.asarray(v)
+            n += 1
+        ctrl.update(vecs, np.array(rewards))
+    # fall back to best-by-reward if nothing met the constraints
+    if best is None:
+        valid = [
+            (h, i) for i, h in enumerate(history) if h["valid"]
+        ]
+        if valid:
+            best = max(valid, key=lambda t: t[0]["reward"])[0]
+    return SearchResult(best_vec, best, history, space,
+                        time.monotonic() - t0)
+
+
+def joint_search(
+    nas_space: Space,
+    acc_fn: Callable,
+    rcfg: RewardConfig,
+    cfg: SearchConfig = SearchConfig(),
+    has_space: Optional[Space] = None,
+) -> SearchResult:
+    has_space = has_space or has_lib.has_space()
+    joint = concat(nas_space, has_space)
+
+    def eval_one(vec):
+        return _evaluate(nas_space, has_space, vec, acc_fn, rcfg,
+                         proxy_batch=cfg.proxy_batch)
+
+    warm = None
+    if cfg.hot_start and cfg.controller in ("ppo", "reinforce"):
+        import numpy as _np
+
+        base = has_lib.baseline_vec(has_space)
+        warm = (nas_space.num_decisions, base, cfg.hot_start_logit)
+    return _drive(joint, eval_one, cfg, warm_has=warm)
+
+
+def fixed_hw_search(
+    nas_space: Space,
+    acc_fn: Callable,
+    rcfg: RewardConfig,
+    cfg: SearchConfig = SearchConfig(),
+    h=None,
+) -> SearchResult:
+    h = h or has_lib.BASELINE
+
+    def eval_one(vec):
+        return _evaluate(nas_space, None, vec, acc_fn, rcfg, fixed_h=h,
+                         proxy_batch=cfg.proxy_batch)
+
+    return _drive(nas_space, eval_one, cfg)
+
+
+def phase_search(
+    nas_space: Space,
+    acc_fn: Callable,
+    rcfg: RewardConfig,
+    cfg: SearchConfig = SearchConfig(),
+    initial_arch_vec: Optional[np.ndarray] = None,
+) -> SearchResult:
+    """Fig. 9: phase 1 = HAS on a fixed initial architecture (soft constraint),
+    phase 2 = NAS on the selected accelerator (hard constraint). The sample
+    budget is split between the phases."""
+    hspace = has_lib.has_space()
+    rng = np.random.default_rng(cfg.seed)
+    a0 = (initial_arch_vec if initial_arch_vec is not None
+          else nas_space.sample(rng))
+    spec0 = nas_space.decode(a0)
+    soft = dataclasses.replace(rcfg, mode="soft")
+    acc0 = acc_fn(spec0)
+
+    def eval_h(hv):
+        sim = simulator.simulate_safe(spec0, hspace.decode(hv),
+                                      batch=cfg.proxy_batch)
+        if sim is None:
+            return {"valid": False, "reward": rcfg.invalid_reward,
+                    "accuracy": 0.0, "latency_ms": None, "energy_mj": None,
+                    "area_mm2": None}
+        r = reward_fn(acc0, sim["latency_ms"], sim["area_mm2"], soft,
+                      energy_mj=sim["energy_mj"])
+        return {
+            "valid": True,
+            "meets_constraints": sim["area_mm2"] <= rcfg.area_target_mm2,
+            "reward": float(r), "accuracy": float(acc0),
+            "latency_ms": float(sim["latency_ms"]),
+            "energy_mj": float(sim["energy_mj"]),
+            "area_mm2": float(sim["area_mm2"]),
+        }
+
+    half = dataclasses.replace(cfg, samples=cfg.samples // 2)
+    phase1 = _drive(hspace, eval_h, half)
+    h_best = (hspace.decode(phase1.best_vec) if phase1.best_vec is not None
+              else has_lib.BASELINE)
+    phase2 = fixed_hw_search(
+        nas_space, acc_fn, rcfg,
+        dataclasses.replace(cfg, samples=cfg.samples - half.samples),
+        h=h_best,
+    )
+    history = phase1.history + phase2.history
+    return SearchResult(phase2.best_vec, phase2.best_record, history,
+                        nas_space, phase1.wall_s + phase2.wall_s)
+
+
+def nested_search(
+    nas_space: Space,
+    acc_fn: Callable,
+    rcfg: RewardConfig,
+    cfg: SearchConfig = SearchConfig(),
+    outer: int = 8,
+) -> SearchResult:
+    """Outer loop over hardware samples; a small NAS per hardware config."""
+    hspace = has_lib.has_space()
+    rng = np.random.default_rng(cfg.seed)
+    inner_budget = max(cfg.samples // outer, 4)
+    history = []
+    best, best_vec = None, None
+    t0 = time.monotonic()
+    for o in range(outer):
+        hv = hspace.sample(rng)
+        h = hspace.decode(hv)
+        res = fixed_hw_search(
+            nas_space, acc_fn, rcfg,
+            dataclasses.replace(cfg, samples=inner_budget, seed=cfg.seed + o),
+            h=h,
+        )
+        history.extend(res.history)
+        if res.best_record is not None and (
+            best is None or res.best_record["reward"] > best["reward"]
+        ):
+            best, best_vec = res.best_record, res.best_vec
+    return SearchResult(best_vec, best, history, nas_space,
+                        time.monotonic() - t0)

@@ -1,0 +1,203 @@
+"""Analytical cycle model + area/power model of the parameterized edge
+accelerator (the paper's in-house cycle-accurate simulator stand-in).
+
+Model (per layer-op, see models/convnets.LayerOp):
+  * compute cycles: output pixels × ceil-tiled over the hardware parallelism —
+    cout across (PEs × lanes), the k²·cin reduction across (SIMD × 4-way).
+    Depthwise convs have no channel reduction, so the 4-way dot units idle
+    (the paper's "regular conv up to 3x more efficient than depthwise" on
+    EdgeTPU-class hardware emerges from exactly this term).
+  * io cycles: weights + input + output bytes through io_bandwidth; weights
+    re-streamed once per output tile pass when they exceed local memory.
+  * latency = Σ max(compute, io) + fixed per-op overhead  (DMA overlap)
+  * invalid configs (Sec 3.3 "the HAS space contains many invalid points"):
+    register file too small for the SIMD working row, local memory smaller
+    than the largest single tile, io starvation beyond 100x, or model weights
+    exceeding 8x total on-chip memory (compiler refuses to tile).
+
+Energy: per-MAC + per-DRAM-byte + leakage·latency. Area: per-component terms.
+Calibration: the baseline config runs MobileNetV2 @224 in ≈0.30 ms / 0.70 mJ
+(Table 3 row 2), and peaks at 26 int8-TOPS @ 0.8 GHz.
+
+Everything is vectorized over layers (numpy), so labelling 500k cost-model
+samples is cheap — the property the paper relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.has import AcceleratorConfig
+from repro.models.convnets import ConvNetSpec, LayerOp, layer_ops
+
+# ---- calibrated constants (see module docstring) --------------------------
+_MAC_PJ = 1.30  # pJ per int8 MAC (incl. local data movement)
+_DRAM_PJ_PER_BYTE = 70.0
+_SRAM_PJ_PER_BYTE = 6.0
+_LEAKAGE_W_PER_MM2 = 0.012
+_OP_OVERHEAD_CYCLES = 600.0  # per-op config/drain
+_PIPELINE_EFF = 0.5  # issue/drain/tiling inefficiency vs ideal ceil model
+_AREA = {  # mm^2 per unit
+    "pe_base": 0.08,
+    "lane": 0.06,
+    "simd_unit": 0.0035,  # per 4-way MAC unit
+    "rf_per_kb": 0.004,
+    "mem_per_mb": 0.9,
+    "io_per_gbps": 0.05,
+    "base": 2.0,
+}
+
+
+class InvalidConfig(Exception):
+    pass
+
+
+def area_mm2(h: AcceleratorConfig) -> float:
+    lanes = h.num_pes * h.compute_lanes
+    return (
+        _AREA["base"]
+        + h.num_pes * _AREA["pe_base"]
+        + lanes * _AREA["lane"]
+        + lanes * h.simd_units * _AREA["simd_unit"]
+        + lanes * h.register_file_kb * _AREA["rf_per_kb"]
+        + h.num_pes * h.local_memory_mb * _AREA["mem_per_mb"]
+        + h.io_bandwidth_gbps * _AREA["io_per_gbps"]
+    )
+
+
+BASELINE_AREA_MM2 = area_mm2(AcceleratorConfig())
+
+
+def _layer_arrays(spec: ConvNetSpec) -> dict[str, np.ndarray]:
+    ops = layer_ops(spec)
+    f = lambda attr: np.array([getattr(o, attr) for o in ops])
+    out_h = np.ceil(f("h") / f("stride"))
+    out_w = np.ceil(f("w") / f("stride"))
+    return {
+        "is_dw": np.array([o.op == "dwconv" for o in ops]),
+        "h": f("h"), "w": f("w"), "cin": f("cin"), "cout": f("cout"),
+        "k": f("kernel"), "groups": f("groups"),
+        "out_hw": out_h * out_w,
+    }
+
+
+def validate(h: AcceleratorConfig, weight_bytes: float) -> Optional[str]:
+    """Returns a reason string when the (model, accelerator) pair is invalid."""
+    # rf must hold two SIMD rows of int8 operands + accumulators
+    rf_needed_kb = h.simd_units * h.simd_width * 6 / 1024
+    if h.register_file_kb < rf_needed_kb:
+        return f"register file {h.register_file_kb}KB < {rf_needed_kb:.1f}KB working set"
+    if h.total_local_memory_bytes < 128 * 1024:
+        return "local memory below minimum tile"
+    if weight_bytes > 8 * h.total_local_memory_bytes and h.io_bandwidth_gbps < 10:
+        return "model too large to stream at this io bandwidth"
+    # pathological aspect ratios the compiler rejects
+    if max(h.pes_x, h.pes_y) / min(h.pes_x, h.pes_y) > 4:
+        return "unsupported PE aspect ratio"
+    return None
+
+
+def simulate(
+    spec: ConvNetSpec,
+    h: AcceleratorConfig,
+    batch: int = 1,
+    strict: bool = True,
+) -> dict:
+    """Returns {latency_ms, energy_mj, power_w, area_mm2, utilization} for one
+    inference of ``spec`` (int8) on accelerator ``h``."""
+    a = _layer_arrays(spec)
+    is_dw = a["is_dw"]
+    macs = np.where(
+        is_dw,
+        a["out_hw"] * a["cout"] * a["k"] ** 2,
+        a["out_hw"] * a["cout"] * a["k"] ** 2 * a["cin"] / a["groups"],
+    ) * batch
+
+    weight_bytes = np.where(
+        is_dw, a["k"] ** 2 * a["cout"],
+        a["k"] ** 2 * (a["cin"] // a["groups"]) * a["cout"],
+    )
+    act_in_bytes = a["h"] * a["w"] * a["cin"] * batch
+    act_out_bytes = a["out_hw"] * a["cout"] * batch
+
+    reason = validate(h, float(weight_bytes.sum()))
+    if reason is not None:
+        if strict:
+            raise InvalidConfig(reason)
+        return {"invalid": reason}
+
+    lanes = h.num_pes * h.compute_lanes
+    # --- compute cycles (ceil-tiled) ---
+    # outputs (spatial x cout) parallelize across lanes; the k^2*cin reduction
+    # fills the SIMD 4-way dot units
+    out_elems = a["out_hw"] * a["cout"] * batch
+    red = a["k"] ** 2 * np.where(is_dw, 1, a["cin"] / a["groups"])
+    inner_conv = np.ceil(red / (h.simd_units * h.simd_width))
+    # depthwise: no channel reduction -> the 4-way dot units idle; channels
+    # spread across lanes*SIMD, k^2 taps are sequential. This is exactly why
+    # regular convs use this class of hardware ~3x more efficiently (Sec 3.2.2)
+    dw_cycles = np.ceil(out_elems / (lanes * h.simd_units)) * a["k"] ** 2
+    compute_cycles = np.where(
+        is_dw,
+        dw_cycles,
+        np.ceil(out_elems / lanes) * inner_conv,
+    )
+
+    # --- io cycles ---
+    # weights persist in local memory across inferences when the whole model
+    # fits (<=75% of capacity) — this is what makes local_memory a real search
+    # knob: big models on small-memory configs go weight-streaming and turn
+    # io-bound ("larger models require a higher memory-to-compute ratio").
+    local = h.total_local_memory_bytes
+    weights_resident = float(weight_bytes.sum()) <= 0.75 * local
+    passes = np.maximum(1.0, weight_bytes / max(local, 1.0))
+    act_resident = (act_in_bytes + act_out_bytes)
+    act_spill = np.maximum(0.0, act_resident - 0.5 * local)
+    w_stream = np.zeros_like(weight_bytes) if weights_resident \
+        else weight_bytes * passes
+    dram_bytes = w_stream + act_spill
+    io_cycles = dram_bytes / h.io_bytes_per_cycle
+
+    # network-level io starvation (single io-bound layers like the classifier
+    # FC are normal; a whole network >20x io-bound is a config the compiler
+    # team would reject)
+    if float(io_cycles.sum()) > 20.0 * float(compute_cycles.sum()):
+        if strict:
+            raise InvalidConfig("io-starved configuration (>20x compute)")
+        return {"invalid": "io-starved"}
+
+    compute_cycles = compute_cycles / _PIPELINE_EFF
+    layer_cycles = np.maximum(compute_cycles, io_cycles) + _OP_OVERHEAD_CYCLES
+    total_cycles = float(layer_cycles.sum())
+    latency_s = total_cycles / (h.frequency_ghz * 1e9)
+
+    area = area_mm2(h)
+    dyn_j = (
+        float(macs.sum()) * _MAC_PJ * 1e-12
+        + float(dram_bytes.sum()) * _DRAM_PJ_PER_BYTE * 1e-12
+        + float((act_in_bytes + act_out_bytes).sum()) * _SRAM_PJ_PER_BYTE * 1e-12
+    )
+    leak_j = _LEAKAGE_W_PER_MM2 * area * latency_s
+    energy_j = dyn_j + leak_j
+
+    peak_macs = h.macs_per_cycle * total_cycles
+    return {
+        "latency_ms": latency_s * 1e3,
+        "energy_mj": energy_j * 1e3,
+        "power_w": energy_j / latency_s,
+        "area_mm2": area,
+        "utilization": float(macs.sum()) / max(peak_macs, 1.0),
+        "macs": float(macs.sum()),
+        "dram_bytes": float(dram_bytes.sum()),
+    }
+
+
+def simulate_safe(spec: ConvNetSpec, h: AcceleratorConfig, batch: int = 1):
+    """None-on-invalid variant (the search reward path)."""
+    try:
+        return simulate(spec, h, batch=batch, strict=True)
+    except InvalidConfig:
+        return None

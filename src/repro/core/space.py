@@ -1,0 +1,97 @@
+"""A small symbolic search-space library (stands in for PyGlove in the paper:
+"we can replace any static node in a computational graph with a tunable node").
+
+A search space is a list of named ``Choice`` decision points. Configurations
+are integer vectors (one index per decision), which keeps controllers simple
+(factorized categorical policies) and featurization trivial.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    name: str
+    options: tuple
+
+    def __len__(self) -> int:
+        return len(self.options)
+
+
+@dataclasses.dataclass
+class Space:
+    """An ordered set of decision points + a decoder into a concrete config."""
+
+    choices: list[Choice]
+    decoder: Callable[[dict], Any] = lambda d: d
+    name: str = "space"
+
+    @property
+    def num_decisions(self) -> int:
+        return len(self.choices)
+
+    @property
+    def arity(self) -> list[int]:
+        return [len(c) for c in self.choices]
+
+    @property
+    def cardinality(self) -> float:
+        out = 1.0
+        for c in self.choices:
+            out *= len(c)
+        return out
+
+    def sample(self, rng: np.random.Generator) -> np.ndarray:
+        return np.array([rng.integers(0, len(c)) for c in self.choices], np.int32)
+
+    def decode(self, vec: Sequence[int]) -> Any:
+        d = {c.name: c.options[int(v)] for c, v in zip(self.choices, vec)}
+        return self.decoder(d)
+
+    def to_dict(self, vec: Sequence[int]) -> dict:
+        return {c.name: c.options[int(v)] for c, v in zip(self.choices, vec)}
+
+    def features(self, vec: Sequence[int]) -> np.ndarray:
+        """One-hot featurization (the cost model input)."""
+        out = []
+        for c, v in zip(self.choices, vec):
+            oh = np.zeros(len(c), np.float32)
+            oh[int(v)] = 1.0
+            out.append(oh)
+        return np.concatenate(out)
+
+    @property
+    def feature_dim(self) -> int:
+        return sum(len(c) for c in self.choices)
+
+    def mutate(self, vec: np.ndarray, rng: np.random.Generator,
+               rate: float = 0.1) -> np.ndarray:
+        out = vec.copy()
+        for i, c in enumerate(self.choices):
+            if rng.random() < rate:
+                out[i] = rng.integers(0, len(c))
+        return out
+
+
+def concat(a: Space, b: Space, decoder=None, name="joint") -> Space:
+    """The paper's unified joint space: NAS ++ HAS decision points."""
+    na = a.num_decisions
+
+    def dec(d):
+        da = {c.name: d[c.name] for c in a.choices}
+        db = {c.name: d[c.name] for c in b.choices}
+        if decoder is not None:
+            return decoder(a.decoder(da), b.decoder(db))
+        return (a.decoder(da), b.decoder(db))
+
+    return Space(list(a.choices) + list(b.choices), dec, name)
+
+
+def split_vec(joint: Space, a: Space, vec: np.ndarray):
+    na = a.num_decisions
+    return vec[:na], vec[na:]

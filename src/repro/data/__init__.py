@@ -1,0 +1,2 @@
+"""Data substrate: synthetic-but-learnable pipelines, host-sharded loading,
+prefetch."""

@@ -1,0 +1,65 @@
+"""jit'd dispatch wrappers: Pallas kernel on TPU, interpret-mode on explicit
+request (tests), pure-jnp reference otherwise. Model code calls these; it
+never touches pallas_call directly."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.gmm import gmm as _gmm_pallas
+from repro.kernels.ibn_conv import ibn_pointwise as _ibn_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def flash_attention_available() -> bool:
+    return on_tpu()
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, q_offset=0, kv_len=None,
+    interpret: bool = False,
+):
+    """(B,S,H,hd)/(B,T,KV,hd) layout (model convention) -> (B,S,H,hd).
+
+    The decode path (q_offset/kv_len masking against a preallocated cache) is
+    served by the chunked-jnp flash-decoding path in models.layers; this entry
+    point covers the training/prefill shapes.
+    """
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if on_tpu() or interpret:
+        out = _flash_pallas(qt, kt, vt, causal=causal, interpret=interpret)
+    else:
+        out = ref.flash_attention_ref(qt, kt, vt, causal=causal)
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
+    if on_tpu() or interpret:
+        return _ssd_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    return ref.ssd_scan_ref(x, dt, A, B, C, chunk)
+
+
+def gmm(x, w, *, interpret: bool = False):
+    if on_tpu() or interpret:
+        return _gmm_pallas(x, w, interpret=interpret)
+    return ref.gmm_ref(x, w)
+
+
+def ibn_pointwise(x, w, b, *, act: str = "relu", interpret: bool = False):
+    if on_tpu() or interpret:
+        return _ibn_pallas(x, w, b, act=act, interpret=interpret)
+    return ref.ibn_pointwise_ref(x, w, b, act)

@@ -1,0 +1,25 @@
+"""Target-hardware constants (TPU v5e-class chip) used by the roofline model.
+
+The container runs on CPU; these describe the TARGET the dry-run artifacts are
+analysed against, per the assignment: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12  # FLOP/s
+    hbm_bw: float = 819e9  # bytes/s
+    hbm_bytes: int = 16 * 1024**3
+    ici_link_bw: float = 50e9  # bytes/s per link (we model 1 active link —
+    # conservative; constant across cells so comparisons hold)
+    dcn_bw: float = 25e9  # bytes/s per host for cross-pod traffic
+
+
+V5E = ChipSpec()
+
+PODS = {"single": 256, "multi": 512}

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(the dry-run sets XLA_FLAGS before any jax initialization; smoke tests see the
+single real device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips, axes (data, model).
+    Multi-pod: 2 pods × 256 = 512 chips, axes (pod, data, model); only
+    DP gradient all-reduce crosses the pod (DCN) boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests / the NAHAS mesh-search (h-space knob)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def host_device_counts() -> int:
+    return len(jax.devices())

@@ -1,0 +1,11 @@
+"""Pure-JAX functional model zoo.
+
+Each family module exposes:
+  init(rng, cfg)                 -> params pytree
+  forward(params, batch, cfg)    -> logits (train / prefill)
+  init_cache(cfg, batch, ...)    -> decode cache pytree        (decoder families)
+  decode_step(params, cache, tok, cfg) -> (logits, new_cache)  (decoder families)
+
+``repro.models.api`` dispatches on cfg.family.
+"""
+from repro.models import api  # noqa: F401

@@ -1,0 +1,328 @@
+"""The paper's NAS model families: IBN-based ConvNets (MobileNetV2 S1,
+EfficientNet-B0 S2) and the evolved EdgeTPU space (per-layer IBN vs Fused-IBN,
+tunable kernel / expansion / filter-multiplier / groups — Sec. 3.2).
+
+Functional JAX implementation. GroupNorm replaces BatchNorm so the model stays
+stateless (noted in DESIGN.md); on the proxy tasks this does not change the
+search-quality comparisons the paper makes.
+
+Each block is described by a ``BlockSpec``; a full model by ``ConvNetSpec``.
+``layer_ops()`` exports per-layer (op, shape) records — the interface consumed
+by the accelerator performance simulator (repro.core.simulator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import dtype_of, fold_rng
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    op: str = "ibn"  # "ibn" | "fused"
+    kernel: int = 3  # {3, 5, 7}
+    expansion: int = 6  # {1, 3, 6}
+    filters: int = 16  # output channels
+    stride: int = 1
+    groups: int = 1  # for the fused conv  {1, 2}
+    se: bool = False  # squeeze-and-excite
+    act: str = "relu"  # "relu" | "swish"
+
+
+@dataclass(frozen=True)
+class ConvNetSpec:
+    name: str
+    blocks: tuple[BlockSpec, ...]
+    stem_filters: int = 32
+    head_filters: int = 1280
+    num_classes: int = 1000
+    image_size: int = 224
+    param_dtype: str = "float32"
+
+
+# ---------------------------------------------------------------------------
+# Reference model families (Sec. 3.2.1 / 3.2.2)
+# ---------------------------------------------------------------------------
+
+# (expansion, filters, repeats, stride, kernel)
+_MBV2_STAGES = [
+    (1, 16, 1, 1, 3),
+    (6, 24, 2, 2, 3),
+    (6, 32, 3, 2, 3),
+    (6, 64, 4, 2, 3),
+    (6, 96, 3, 1, 3),
+    (6, 160, 3, 2, 3),
+    (6, 320, 1, 1, 3),
+]
+
+_EFFNET_B0_STAGES = [
+    (1, 16, 1, 1, 3),
+    (6, 24, 2, 2, 3),
+    (6, 40, 2, 2, 5),
+    (6, 80, 3, 2, 3),
+    (6, 112, 3, 1, 5),
+    (6, 192, 4, 2, 5),
+    (6, 320, 1, 1, 3),
+]
+
+
+def _expand_stages(stages, se=False, act="relu") -> tuple[BlockSpec, ...]:
+    blocks = []
+    for exp, f, r, s, k in stages:
+        for i in range(r):
+            blocks.append(
+                BlockSpec(
+                    op="ibn", kernel=k, expansion=exp, filters=f,
+                    stride=s if i == 0 else 1, se=se, act=act,
+                )
+            )
+    return tuple(blocks)
+
+
+def mobilenet_v2(num_classes=1000, image_size=224, width=1.0) -> ConvNetSpec:
+    blocks = tuple(
+        replace(b, filters=max(8, int(b.filters * width)))
+        for b in _expand_stages(_MBV2_STAGES)
+    )
+    return ConvNetSpec(
+        "mobilenet_v2", blocks, stem_filters=max(8, int(32 * width)),
+        head_filters=1280, num_classes=num_classes, image_size=image_size,
+    )
+
+
+def efficientnet_b0(num_classes=1000, image_size=224, se=True, swish=True) -> ConvNetSpec:
+    """'wo SE/Swish' baselines in Table 3 use se=False, swish=False."""
+    blocks = _expand_stages(_EFFNET_B0_STAGES, se=se, act="swish" if swish else "relu")
+    return ConvNetSpec(
+        "efficientnet_b0", blocks, stem_filters=32, head_filters=1280,
+        num_classes=num_classes, image_size=image_size,
+    )
+
+
+def manual_edgetpu(num_classes=1000, image_size=224, size="s") -> ConvNetSpec:
+    """Manually crafted model on the evolved space (Sec. 3.2.2): Fused-IBN in
+    the early layers, conventional IBN later."""
+    base = efficientnet_b0(num_classes, image_size, se=False, swish=False)
+    n_fused = 6 if size == "s" else 9
+    blocks = tuple(
+        replace(b, op="fused" if i < n_fused else "ibn")
+        for i, b in enumerate(base.blocks)
+    )
+    width = 1.0 if size == "s" else 1.2
+    blocks = tuple(replace(b, filters=int(b.filters * width)) for b in blocks)
+    return ConvNetSpec(
+        f"manual_edgetpu_{size}", blocks, stem_filters=32, head_filters=1280,
+        num_classes=num_classes, image_size=image_size,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Functional model
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(rng, kh, kw, cin, cout, dtype, groups=1):
+    fan_in = kh * kw * cin // groups
+    std = math.sqrt(2.0 / fan_in)
+    return (jax.random.normal(rng, (kh, kw, cin // groups, cout), jnp.float32) * std
+            ).astype(dtype)
+
+
+def _conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def _depthwise(x, w, stride=1):
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def _gn_init(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _gn(params, x, groups=8):
+    c = x.shape[-1]
+    g = math.gcd(groups, c)
+    xs = x.reshape(x.shape[:-1] + (g, c // g)).astype(jnp.float32)
+    mean = xs.mean(axis=(1, 2, 4), keepdims=True)
+    var = xs.var(axis=(1, 2, 4), keepdims=True)
+    xs = (xs - mean) * jax.lax.rsqrt(var + 1e-5)
+    x = xs.reshape(x.shape)
+    return (x * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def _act(x, kind):
+    return jax.nn.swish(x) if kind == "swish" else jax.nn.relu(x)
+
+
+def init_block_params(rng, spec: BlockSpec, cin: int, dtype) -> dict:
+    ks = jax.random.split(rng, 6)
+    mid = cin * spec.expansion
+    p = {}
+    if spec.op == "fused":
+        p["fused_w"] = _conv_init(ks[0], spec.kernel, spec.kernel, cin, mid, dtype,
+                                  groups=spec.groups)
+        p["fused_gn"] = _gn_init(mid, dtype)
+    else:
+        p["expand_w"] = _conv_init(ks[0], 1, 1, cin, mid, dtype)
+        p["expand_gn"] = _gn_init(mid, dtype)
+        p["dw_w"] = _conv_init(ks[1], spec.kernel, spec.kernel, 1, mid, dtype)
+        p["dw_gn"] = _gn_init(mid, dtype)
+    if spec.se:
+        se_dim = max(1, cin // 4)
+        p["se_reduce"] = _conv_init(ks[2], 1, 1, mid, se_dim, dtype)
+        p["se_expand"] = _conv_init(ks[3], 1, 1, se_dim, mid, dtype)
+    p["project_w"] = _conv_init(ks[4], 1, 1, mid, spec.filters, dtype)
+    p["project_gn"] = _gn_init(spec.filters, dtype)
+    return p
+
+
+def block_apply(p: dict, x, spec: BlockSpec):
+    cin = x.shape[-1]
+    h = x
+    if spec.op == "fused":
+        h = _act(_gn(p["fused_gn"], _conv(h, p["fused_w"], spec.stride, spec.groups)),
+                 spec.act)
+    else:
+        h = _act(_gn(p["expand_gn"], _conv(h, p["expand_w"], 1)), spec.act)
+        h = _act(_gn(p["dw_gn"], _depthwise(h, p["dw_w"], spec.stride)), spec.act)
+    if spec.se:
+        s = jnp.mean(h, axis=(1, 2), keepdims=True)
+        s = jax.nn.relu(_conv(s, p["se_reduce"]))
+        s = jax.nn.sigmoid(_conv(s, p["se_expand"]))
+        h = h * s
+    h = _gn(p["project_gn"], _conv(h, p["project_w"], 1))
+    if spec.stride == 1 and cin == spec.filters:
+        h = h + x
+    return h
+
+
+def init(rng, spec: ConvNetSpec) -> dict:
+    dtype = dtype_of(spec.param_dtype)
+    params = {
+        "stem_w": _conv_init(fold_rng(rng, "stem"), 3, 3, 3, spec.stem_filters, dtype),
+        "stem_gn": _gn_init(spec.stem_filters, dtype),
+        "blocks": [],
+    }
+    cin = spec.stem_filters
+    for i, b in enumerate(spec.blocks):
+        params["blocks"].append(
+            init_block_params(fold_rng(rng, f"block{i}"), b, cin, dtype)
+        )
+        cin = b.filters
+    params["head_w"] = _conv_init(fold_rng(rng, "head"), 1, 1, cin, spec.head_filters,
+                                  dtype)
+    params["head_gn"] = _gn_init(spec.head_filters, dtype)
+    params["classifier"] = (
+        jax.random.normal(fold_rng(rng, "cls"),
+                          (spec.head_filters, spec.num_classes), jnp.float32) * 0.01
+    ).astype(dtype)
+    return params
+
+
+def forward(params: dict, images: jax.Array, spec: ConvNetSpec) -> jax.Array:
+    """images: (B, H, W, 3) -> logits (B, num_classes)."""
+    x = _act(_gn(params["stem_gn"], _conv(images, params["stem_w"], 2)), "relu")
+    for p, b in zip(params["blocks"], spec.blocks):
+        x = block_apply(p, x, b)
+    x = _act(_gn(params["head_gn"], _conv(x, params["head_w"], 1)), "relu")
+    x = jnp.mean(x, axis=(1, 2))
+    return (x @ params["classifier"]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Layer-op export for the accelerator simulator
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerOp:
+    op: str          # conv | dwconv | matmul
+    h: int
+    w: int
+    cin: int
+    cout: int
+    kernel: int
+    stride: int
+    groups: int = 1
+
+
+_LAYER_OPS_CACHE: dict = {}
+
+
+def layer_ops(spec: ConvNetSpec) -> list[LayerOp]:
+    key = spec  # frozen dataclass: hashable
+    hit = _LAYER_OPS_CACHE.get(key)
+    if hit is not None:
+        return hit
+    out = _layer_ops_impl(spec)
+    if len(_LAYER_OPS_CACHE) > 4096:
+        _LAYER_OPS_CACHE.clear()
+    _LAYER_OPS_CACHE[key] = out
+    return out
+
+
+def _layer_ops_impl(spec: ConvNetSpec) -> list[LayerOp]:
+    ops: list[LayerOp] = []
+    size = spec.image_size
+    ops.append(LayerOp("conv", size, size, 3, spec.stem_filters, 3, 2))
+    size = (size + 1) // 2
+    cin = spec.stem_filters
+    for b in spec.blocks:
+        mid = cin * b.expansion
+        if b.op == "fused":
+            ops.append(LayerOp("conv", size, size, cin, mid, b.kernel, b.stride,
+                               b.groups))
+            size = (size + b.stride - 1) // b.stride
+        else:
+            ops.append(LayerOp("conv", size, size, cin, mid, 1, 1))
+            ops.append(LayerOp("dwconv", size, size, mid, mid, b.kernel, b.stride))
+            size = (size + b.stride - 1) // b.stride
+        if b.se:
+            se_dim = max(1, cin // 4)
+            ops.append(LayerOp("conv", 1, 1, mid, se_dim, 1, 1))
+            ops.append(LayerOp("conv", 1, 1, se_dim, mid, 1, 1))
+        ops.append(LayerOp("conv", size, size, mid, b.filters, 1, 1))
+        cin = b.filters
+    ops.append(LayerOp("conv", size, size, cin, spec.head_filters, 1, 1))
+    ops.append(LayerOp("matmul", 1, 1, spec.head_filters, spec.num_classes, 1, 1))
+    return ops
+
+
+def count_params(spec: ConvNetSpec) -> int:
+    n = 0
+    for op in layer_ops(spec):
+        n += op.kernel * op.kernel * (op.cin // op.groups) * op.cout \
+            if op.op != "dwconv" else op.kernel * op.kernel * op.cout
+    return n
+
+
+def count_flops(spec: ConvNetSpec) -> int:
+    """Multiply-adds ×2 over a single image."""
+    n = 0
+    for op in layer_ops(spec):
+        out_hw = -(-op.h // op.stride) * (-(-op.w // op.stride))
+        if op.op == "dwconv":
+            n += 2 * out_hw * op.cout * op.kernel * op.kernel
+        else:
+            n += 2 * out_hw * op.cout * op.kernel * op.kernel * op.cin // op.groups
+    return n

@@ -1,0 +1,3 @@
+"""Distribution substrate: parallel context, sharding rules, gradient compression,
+pipeline-parallel utilities."""
+from repro.parallel.ctx import ParallelCtx  # noqa: F401

@@ -1,0 +1,70 @@
+"""Gradient compression for data-parallel all-reduce (int8 + error feedback).
+
+At 1000+ nodes the DP gradient all-reduce crosses DCN (between pods) where
+bandwidth is ~30x lower than ICI; 4x compression (fp32 -> int8) directly
+scales that term down. Error feedback keeps the compression unbiased over
+time (the residual is added back before the next quantization), which is the
+standard trick that makes low-bit gradient exchange converge.
+
+Used by the pure-DP train step (``make_dp_train_step``) where gradients are
+per-shard and the psum is explicit. Under the TP/FSDP pjit path XLA owns the
+all-reduce, so compression there is a compiler concern, not ours.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import PyTree
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(
+    grads: PyTree,
+    axis_name: str,
+    error: Optional[PyTree] = None,
+) -> tuple[PyTree, PyTree]:
+    """int8-compressed psum with error feedback.
+
+    Each shard quantizes (grad + carried error) to int8, psums the int8
+    payload (accumulating in int32 to avoid overflow across shards), and
+    psums the tiny fp32 scales. Returns (mean-ish summed grads, new_error).
+    """
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(target)
+        local_deq = dequantize_int8(q, scale)
+        new_e = target - local_deq  # residual stays on this shard
+        summed = jax.lax.psum(q.astype(jnp.int32) * 1, axis_name).astype(jnp.float32)
+        # every shard has its own scale; psum the per-shard scaled payloads by
+        # scaling before the sum would need fp32 traffic — instead share the
+        # max scale (1 scalar psum) and requantize against it.
+        smax = jax.lax.pmax(scale, axis_name)
+        qn = jnp.clip(jnp.round(target / smax), -127, 127).astype(jnp.int8)
+        summed = jax.lax.psum(qn.astype(jnp.int32), axis_name).astype(jnp.float32)
+        deq = summed * smax
+        new_e = target - jnp.clip(jnp.round(target / smax), -127, 127) * smax
+        return deq, new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_grads = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_error = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_grads, new_error

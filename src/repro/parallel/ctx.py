@@ -1,0 +1,88 @@
+"""ParallelCtx — static description of how a model invocation is distributed.
+
+Threaded (as a trace-time constant) from the launcher into model code that
+needs explicit collectives (MoE expert parallelism, sequence-parallel decode).
+``None`` means single-device execution (smoke tests, reference paths).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Mesh
+    batch_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp_params: bool = True
+    # tp=False turns the model axis into a second data axis (TP degree 1):
+    # the §Perf lever for small-dense cells where TP-16 activation
+    # all-reduces dominate the collective roofline term
+    tp: bool = True
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.tp else 1
+
+    @property
+    def act_model_axis(self):
+        """Axis name for model-sharded activations/logits (None if TP off)."""
+        return self.model_axis if self.tp else None
+
+    @property
+    def batch_size(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def data_axis(self) -> str:
+        """The primary intra-pod data axis (used for FSDP weight gathering)."""
+        return self.batch_axes[-1]
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return tuple(self.batch_axes) + (self.model_axis,)
+
+    def batch_spec(self, *trailing) -> P:
+        ax = self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+        return P(ax, *trailing)
+
+
+def from_mesh(mesh: Optional[Mesh], multi_pod: bool = False, fsdp: bool = True,
+              tp: bool = True):
+    if mesh is None:
+        return None
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    if not tp:
+        batch_axes = batch_axes + ("model",)
+    return ParallelCtx(mesh=mesh, batch_axes=batch_axes, fsdp_params=fsdp,
+                       tp=tp)
+
+
+def constrain(x, pc: Optional[ParallelCtx], *spec, batch_dim: Optional[int] = None):
+    """with_sharding_constraint helper. Keeps SPMD propagation deterministic at
+    layer boundaries (without it, partitioner choices drift between compiles,
+    which breaks the dry-run cost calibration). No-op when pc is None.
+
+    ``batch_dim``: index within spec to replace with the DP axes, but only when
+    that dim divides the DP extent (batch=1 decode stays unsharded)."""
+    if pc is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    spec = list(spec)
+    if batch_dim is not None:
+        if x.shape[batch_dim] % pc.batch_size == 0:
+            ax = pc.batch_axes if len(pc.batch_axes) > 1 else pc.batch_axes[0]
+            spec[batch_dim] = ax
+        else:
+            spec[batch_dim] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pc.mesh, P(*spec))
+    )

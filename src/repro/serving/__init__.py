@@ -1,0 +1,1 @@
+"""Serving substrate: KV caches (bf16 / quantized int8), decode loops, batching."""

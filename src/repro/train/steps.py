@@ -1,0 +1,240 @@
+"""Step factories: build (step_fn, in/out shardings, input ShapeDtypeStructs)
+for train / prefill / decode, per (ModelConfig × ShapeConfig × MeshConfig).
+
+These are the functions the multi-pod dry-run lowers and compiles, and the
+same functions the real launcher runs — there is no separate "dry-run model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common import dtype_of
+from repro.config import ModelConfig, RunConfig, ShapeConfig
+from repro.models import api
+from repro.parallel import sharding
+from repro.parallel.ctx import ParallelCtx
+from repro.train.optim import make_optimizer
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — the dry-run contract)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.mode == "train":
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), f32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            return {
+                "patches": jax.ShapeDtypeStruct((b, p, cfg.frontend_dim), f32),
+                "tokens": jax.ShapeDtypeStruct((b, s - p), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if shape.mode == "prefill":
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), f32)}
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            return {
+                "patches": jax.ShapeDtypeStruct((b, p, cfg.frontend_dim), f32),
+                "tokens": jax.ShapeDtypeStruct((b, s - p), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    """Param ShapeDtypeStructs without allocating (eval_shape over init)."""
+    return jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, kv_dtype: str):
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len, kv_dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(run: RunConfig, pc: Optional[ParallelCtx]):
+    """Returns (train_step, state_specs, batch_specs).
+
+    train_step(state, batch) -> (state, metrics)
+    state = {"params", "opt"}; metrics are replicated scalars.
+    Gradient accumulation over run.train.microbatches via lax.scan keeps the
+    activation / MoE-dispatch working set inside HBM.
+    """
+    cfg = run.model
+    tcfg = run.train
+    opt = make_optimizer(tcfg)
+    k = tcfg.microbatches
+
+    def loss_of(params, batch):
+        return api.loss_fn(params, batch, cfg, pc, remat=tcfg.remat)
+
+    def train_step(state, batch):
+        master = state["params"]
+        params = master
+        if tcfg.cast_params_once:
+            # hoisted OUTSIDE the microbatch scan: grads are taken w.r.t. the
+            # bf16 tree, so FSDP all-gathers and grad reductions move bf16;
+            # the fp32 master copy is touched only by the optimizer update.
+            from repro.common import tree_cast
+
+            params = tree_cast(master, cfg.compute_dtype)
+
+        if k == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch
+            )
+        else:
+
+            def split(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                    params, mb
+                )
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / k, gacc, grads
+                )
+                return (gacc, lacc + loss / k), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(accum, (g0, 0.0), micro,
+                                            unroll=k if cfg.unroll_scans else 1)
+            metrics = {"loss": loss, "ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        new_params, new_opt, opt_metrics = opt.step(master, grads, state["opt"])
+        metrics = dict(metrics, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    if pc is None:
+        return train_step, None, None
+
+    aparams = abstract_params(cfg)
+    pspecs = sharding.param_specs(aparams, cfg, pc, run.mesh)
+    aopt = jax.eval_shape(opt.init, aparams)
+    ospecs = _opt_specs(aopt, pspecs)
+    state_specs = {"params": pspecs, "opt": ospecs}
+    bspecs = sharding.batch_specs(input_specs(cfg, run.shape), pc)
+    return train_step, state_specs, bspecs
+
+
+def _opt_specs(aopt, pspecs):
+    """Optimizer-state specs mirror the param specs; scalars and factored
+    Adafactor vectors are replicated."""
+
+    def build(sub):
+        if isinstance(sub, dict) and set(sub) >= {"step"}:
+            out = {}
+            for key, val in sub.items():
+                if key == "step":
+                    out[key] = P()
+                else:
+                    out[key] = _match_tree(val, pspecs)
+            return out
+        return None
+
+    return build(aopt)
+
+
+def _match_tree(opt_branch, pspecs):
+    """Map opt-state leaves to the corresponding param spec (same structure),
+    replicating any leaf whose shape no longer matches (factored stats)."""
+
+    def go(o, s):
+        if isinstance(o, dict) and not hasattr(o, "shape"):
+            if isinstance(s, dict):
+                # same structural level
+                if set(o) <= set(s):
+                    return {k2: go(v2, s[k2]) for k2, v2 in o.items()}
+            # factored adafactor node {vr, vc} / {v} under a param leaf spec
+            return {k2: _spec_for_factored(v2, s) for k2, v2 in o.items()}
+        if isinstance(o, (list, tuple)):
+            return type(o)(go(v2, s2) for v2, s2 in zip(o, s))
+        return s  # leaf: same shape as param -> same spec
+
+    return go(opt_branch, pspecs)
+
+
+def _spec_for_factored(leaf, param_spec: P):
+    """vr drops the last dim, vc drops the second-to-last; v keeps the spec."""
+    if not hasattr(leaf, "shape"):
+        return P()
+    nspec = len(param_spec)
+    if leaf.ndim == nspec:
+        return param_spec
+    if leaf.ndim == nspec - 1 and nspec >= 1:
+        # can't know if vr or vc here by shape alone; replicate to stay safe
+        return P(*([None] * leaf.ndim))
+    return P(*([None] * leaf.ndim))
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(run: RunConfig, pc: Optional[ParallelCtx]):
+    """prefill(params, batch) -> logits (B, S, V). (Cache materialization is a
+    serving concern; the dry-run cell lowers the forward itself.)"""
+    cfg = run.model
+
+    def prefill_step(params, batch):
+        logits, _ = api.forward(params, batch, cfg, pc, remat="none")
+        return logits
+
+    if pc is None:
+        return prefill_step, None, None
+    aparams = abstract_params(cfg)
+    pspecs = sharding.param_specs(aparams, cfg, pc, run.mesh)
+    bspecs = sharding.batch_specs(input_specs(cfg, run.shape), pc)
+    return prefill_step, pspecs, bspecs
+
+
+def make_decode_step(run: RunConfig, pc: Optional[ParallelCtx]):
+    """decode(params, cache, tokens, index) -> (next_token, logits, new_cache)."""
+    cfg = run.model
+
+    def decode_step(params, cache, tokens, index):
+        logits, new_cache = api.decode_step(params, cache, tokens, index, cfg, pc)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    if pc is None:
+        return decode_step, None, None, None
+    aparams = abstract_params(cfg)
+    pspecs = sharding.param_specs(aparams, cfg, pc, run.mesh)
+    acache = abstract_cache(cfg, run.shape, run.serve.kv_dtype)
+    cspecs = sharding.cache_specs(acache, cfg, pc, run.serve.shard_cache_seq)
+    bspecs = sharding.batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((run.shape.global_batch, 1), jnp.int32)}, pc
+    )
+    return decode_step, pspecs, cspecs, bspecs

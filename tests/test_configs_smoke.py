@@ -1,0 +1,93 @@
+"""Deliverable (f): per assigned architecture, a REDUCED same-family config
+runs one forward + one train step on CPU with correct shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.config import RunConfig, ShapeConfig, TrainConfig
+from repro.models import api
+from repro.train.optim import make_optimizer
+from repro.train.steps import make_train_step
+
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg):
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(RNG, (B, S, cfg.frontend_dim)),
+                "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        p = cfg.num_patches
+        return {
+            "patches": jax.random.normal(RNG, (B, p, cfg.frontend_dim)),
+            "tokens": jax.random.randint(RNG, (B, S - p), 0, cfg.vocab_size),
+            "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size),
+        }
+    return {"tokens": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.smoke(arch)
+    params = api.init(RNG, cfg)
+    batch = _batch(cfg)
+    logits, aux = api.forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), f"{arch}: NaN/inf in logits"
+
+    run = RunConfig(model=cfg, shape=ShapeConfig("smoke", S, B, "train"),
+                    train=TrainConfig(total_steps=10, warmup_steps=1))
+    step, _, _ = make_train_step(run, None)
+    opt = make_optimizer(run.train)
+    state = {"params": params, "opt": opt.init(params)}
+    state, metrics = jax.jit(step)(state, batch)
+    assert jnp.isfinite(metrics["loss"]), f"{arch}: NaN loss"
+    assert all(jnp.isfinite(x).all() for x in jax.tree.leaves(state["params"]))
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config carries the exact published dims from the assignment."""
+    cfg = configs.get(arch)
+    expected = {
+        "pixtral_12b": (40, 5120, 32, 8, 14336, 131072),
+        "qwen3_moe_235b": (94, 4096, 64, 4, 1536, 151936),
+        "qwen2_moe_a2_7b": (24, 2048, 16, 16, 1408, 151936),
+        "gemma_2b": (18, 2048, 8, 1, 16384, 256000),
+        "qwen3_1_7b": (28, 2048, 16, 8, 6144, 151936),
+        "granite_3_2b": (40, 2048, 32, 8, 8192, 49155),
+        "mistral_nemo_12b": (40, 5120, 32, 8, 14336, 131072),
+        "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "mamba2_370m": (48, 1024, 1, 1, 0, 50280),
+    }[configs.ALIASES.get(arch, arch)]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+    if arch == "qwen3_moe_235b":
+        assert (cfg.num_experts, cfg.num_experts_per_tok) == (128, 8)
+    if arch == "qwen2_moe_a2_7b":
+        assert (cfg.num_experts, cfg.num_experts_per_tok,
+                cfg.num_shared_experts) == (60, 4, 4)
+    if arch == "zamba2_7b":
+        assert cfg.ssm_state == 64
+    if arch == "mamba2_370m":
+        assert cfg.ssm_state == 128
+
+
+def test_applicability_table():
+    assert configs.applicable_shapes(configs.get("hubert-xlarge")) == {
+        "train_4k": "ok", "prefill_32k": "ok",
+        "decode_32k": "skipped(encoder-only)",
+        "long_500k": "skipped(encoder-only)",
+    }
+    assert configs.applicable_shapes(configs.get("mistral-nemo-12b"))[
+        "long_500k"] == "skipped(full-attention)"
+    assert configs.applicable_shapes(configs.get("mamba2-370m"))[
+        "long_500k"] == "ok"
+    assert configs.applicable_shapes(configs.get("zamba2-7b"))[
+        "long_500k"] == "ok"

@@ -1,0 +1,191 @@
+"""NAHAS core: spaces, simulator (+hypothesis invariants), reward, controllers,
+cost model, search drivers."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import controllers, costmodel, has, nas, proxy, search, simulator
+from repro.core.reward import RewardConfig, reward
+from repro.models import convnets as C
+
+
+def test_space_cardinalities_match_paper():
+    assert abs(nas.s1_mobilenetv2().cardinality - 8.46e12) / 8.46e12 < 0.01
+    assert abs(nas.s2_efficientnet().cardinality - 1.41e12) / 1.41e12 < 0.01
+
+
+def test_space_roundtrip_and_features():
+    sp = nas.s3_evolved()
+    rng = np.random.default_rng(0)
+    v = sp.sample(rng)
+    spec = sp.decode(v)
+    assert isinstance(spec, C.ConvNetSpec)
+    f = sp.features(v)
+    assert f.shape == (sp.feature_dim,)
+    assert f.sum() == sp.num_decisions  # one-hot per decision
+
+
+def test_simulator_baseline_calibration():
+    r = simulator.simulate(C.mobilenet_v2(), has.BASELINE)
+    # paper anchors: 0.30 ms / 0.70 mJ — calibrated within 2x, right ordering
+    assert 0.1 < r["latency_ms"] < 0.6
+    assert 0.3 < r["energy_mj"] < 1.4
+    assert abs(has.BASELINE.peak_tops - 26.2) < 0.5
+
+
+def test_depthwise_less_efficient_than_conv():
+    """Sec 3.2.2: regular conv uses the hardware ~3x more efficiently — holds
+    for early-layer fusion (Manual-EdgeTPU); an ALL-fused net goes
+    weight-streaming-bound, which is the paper's own argument for keeping IBN
+    in deep large-channel layers."""
+    base = C.efficientnet_b0(se=False, swish=False)
+    manual = C.manual_edgetpu(size="s")
+    r_ibn = simulator.simulate(base, has.BASELINE)
+    r_manual = simulator.simulate(manual, has.BASELINE)
+    assert r_manual["utilization"] > 1.5 * r_ibn["utilization"]
+    # and the all-fused variant is NOT the fastest (deep fused layers hurt)
+    fused = dataclasses.replace(
+        base, blocks=tuple(dataclasses.replace(b, op="fused")
+                           for b in base.blocks))
+    r_fused = simulator.simulate(fused, has.BASELINE)
+    assert r_fused["latency_ms"] > r_ibn["latency_ms"]
+
+
+_h_strategy = st.fixed_dictionaries({
+    "pes_x": st.sampled_from(has.TABLE1["pes_x"]),
+    "pes_y": st.sampled_from(has.TABLE1["pes_y"]),
+    "simd_units": st.sampled_from(has.TABLE1["simd_units"]),
+    "compute_lanes": st.sampled_from(has.TABLE1["compute_lanes"]),
+    "local_memory_mb": st.sampled_from(has.TABLE1["local_memory_mb"]),
+    "register_file_kb": st.sampled_from(has.TABLE1["register_file_kb"]),
+    "io_bandwidth_gbps": st.sampled_from(has.TABLE1["io_bandwidth_gbps"]),
+})
+
+
+@settings(max_examples=40, deadline=None)
+@given(_h_strategy)
+def test_simulator_invariants(hd):
+    """Property: any valid config gives positive, finite, self-consistent
+    metrics; energy >= leakage floor; utilization <= 1."""
+    h = has.AcceleratorConfig(**hd)
+    spec = C.mobilenet_v2()
+    res = simulator.simulate_safe(spec, h)
+    if res is None:
+        return  # invalid points are expected in the HAS space (Sec. 3.3)
+    assert res["latency_ms"] > 0 and np.isfinite(res["latency_ms"])
+    assert res["energy_mj"] > 0
+    assert 0 <= res["utilization"] <= 1.0
+    assert res["area_mm2"] > 0
+    # energy >= leakage * latency
+    leak = simulator._LEAKAGE_W_PER_MM2 * res["area_mm2"] * \
+        res["latency_ms"] * 1e-3
+    assert res["energy_mj"] >= leak * 1e3 * 0.99
+
+
+@settings(max_examples=25, deadline=None)
+@given(_h_strategy)
+def test_more_compute_never_slower(hd):
+    """Doubling SIMD units (same everything else) never increases latency."""
+    h = has.AcceleratorConfig(**hd)
+    if h.simd_units >= 128:
+        return
+    h2 = dataclasses.replace(h, simd_units=h.simd_units * 2)
+    r1 = simulator.simulate_safe(C.mobilenet_v2(), h)
+    r2 = simulator.simulate_safe(C.mobilenet_v2(), h2)
+    if r1 is None or r2 is None:
+        return
+    assert r2["latency_ms"] <= r1["latency_ms"] * 1.0001
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.3, 0.99), st.floats(0.05, 3.0), st.floats(10.0, 120.0))
+def test_reward_properties(acc, lat, area):
+    cfg = RewardConfig(latency_target_ms=0.5, area_target_mm2=60.0,
+                       mode="hard")
+    r = reward(acc, lat, area, cfg)
+    if lat <= 0.5 and area <= 60.0:
+        assert r == pytest.approx(acc)  # hard mode: meets => reward = acc
+    else:
+        assert r < acc  # violations strictly penalized
+    soft = RewardConfig(latency_target_ms=0.5, area_target_mm2=60.0,
+                        mode="soft")
+    rs = reward(acc, lat, area, soft)
+    # soft mode is monotone-decreasing in latency
+    rs2 = reward(acc, lat * 1.5, area, soft)
+    assert rs2 <= rs + 1e-12
+
+
+def test_reward_invalid():
+    cfg = RewardConfig(latency_target_ms=0.5, area_target_mm2=60.0)
+    assert reward(0.9, None, None, cfg) == cfg.invalid_reward
+
+
+def test_ppo_solves_bandit():
+    """PPO must find the argmax of a separable synthetic reward."""
+    from repro.core.space import Choice, Space
+    sp = Space([Choice(f"d{i}", (0, 1, 2, 3)) for i in range(5)])
+    ctrl = controllers.PPOController(sp, seed=0)
+    target = np.array([3, 0, 2, 1, 3])
+    for _ in range(60):
+        vecs = ctrl.sample(16)
+        rewards = np.array([np.sum(v == target) / 5 for v in vecs])
+        ctrl.update(vecs, rewards)
+    assert np.sum(ctrl.best() == target) >= 4
+
+
+def test_reinforce_improves():
+    from repro.core.space import Choice, Space
+    sp = Space([Choice(f"d{i}", (0, 1)) for i in range(6)])
+    ctrl = controllers.ReinforceController(sp, seed=0)
+    target = np.ones(6)
+    first = None
+    for it in range(80):
+        vecs = ctrl.sample(8)
+        rewards = np.array([np.mean(v == target) for v in vecs])
+        if first is None:
+            first = rewards.mean()
+        ctrl.update(vecs, rewards)
+    assert np.mean(ctrl.best() == target) >= 0.8
+
+
+def test_cost_model_learns():
+    ns = nas.tiny_space()
+    hs = has.has_space()
+    feats, lat, area = costmodel.generate_dataset(ns, hs, 900, seed=0)
+    cfg = costmodel.CostModelConfig(steps=2500, batch=64)
+    model, metrics = costmodel.train(feats, lat, area, cfg)
+    assert metrics["val_latency_mape"] < 0.40, metrics
+    # Eq. 7 weighs latency 10x over area, so the shared-trunk area head is
+    # deliberately underfit (paper design choice) — looser threshold
+    assert metrics["val_area_mape"] < 0.25, metrics
+
+
+def test_joint_beats_fixed_hw_on_energy():
+    """The paper's core claim, at test scale: joint search reaches better
+    energy at equal accuracy than fixed-hardware NAS (surrogate signal)."""
+    ns = nas.tiny_space()
+    acc = proxy.SurrogateAccuracy(noise_pct=0.0)
+    rcfg = RewardConfig(latency_target_ms=0.5,
+                        area_target_mm2=simulator.BASELINE_AREA_MM2,
+                        energy_target_mj=0.5)
+    scfg = search.SearchConfig(samples=96, batch=16, seed=0)
+    joint = search.joint_search(ns, acc, rcfg, scfg)
+    fixed = search.fixed_hw_search(ns, acc, rcfg, scfg)
+    jbest = [h for h in joint.history
+             if h["valid"] and h.get("meets_constraints")]
+    assert joint.best_record is not None
+    if fixed.best_record is not None:
+        # joint should match or beat the fixed-hw reward
+        assert joint.best_record["reward"] >= fixed.best_record["reward"] - 0.02
+
+
+def test_phase_search_runs():
+    ns = nas.tiny_space()
+    acc = proxy.SurrogateAccuracy(noise_pct=0.0)
+    rcfg = RewardConfig(latency_target_ms=0.5,
+                        area_target_mm2=simulator.BASELINE_AREA_MM2)
+    res = search.phase_search(ns, acc, rcfg,
+                              search.SearchConfig(samples=48, batch=8))
+    assert len(res.history) == 48

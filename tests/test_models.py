@@ -1,0 +1,127 @@
+"""Model-family behaviour: shapes, finiteness, decode/prefill consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import ModelConfig
+from repro.models import api
+
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 24
+
+
+def _cfg(family, **kw):
+    base = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                d_ff=128, vocab_size=97)
+    base.update(kw)
+    return ModelConfig(name=f"t-{family}", family=family, **base)
+
+
+CFGS = {
+    "dense": _cfg("dense", use_qk_norm=True),
+    "gqa1": _cfg("dense", num_kv_heads=1, head_dim=32, act="gelu",
+                 tie_embeddings=True, embed_scale=True),
+    "moe": _cfg("moe", num_kv_heads=4, num_experts=4, num_experts_per_tok=2,
+                moe_d_ff=32, num_shared_experts=2),
+    "ssm": _cfg("ssm", num_heads=1, num_kv_heads=1, ssm_state=16,
+                ssm_head_dim=16, ssm_chunk=8),
+    "hybrid": _cfg("hybrid", num_layers=5, num_kv_heads=4, ssm_state=16,
+                   ssm_head_dim=16, ssm_chunk=8, hybrid_attn_every=2),
+    "audio": _cfg("audio", num_kv_heads=4, causal=False,
+                  frontend="audio_frames", frontend_dim=32),
+    "vlm": _cfg("vlm", frontend="vision_patches", frontend_dim=16,
+                num_patches=8),
+}
+
+
+def _batch(cfg):
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(RNG, (B, S, cfg.frontend_dim)),
+                "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        p = cfg.num_patches
+        return {
+            "patches": jax.random.normal(RNG, (B, p, cfg.frontend_dim)),
+            "tokens": jax.random.randint(RNG, (B, S - p), 0, cfg.vocab_size),
+            "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size),
+        }
+    return {"tokens": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_forward_shapes_finite(name):
+    cfg = CFGS[name]
+    params = api.init(RNG, cfg)
+    logits, aux = api.forward(params, _batch(cfg), cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_loss_and_grads_finite(name):
+    cfg = CFGS[name]
+    params = api.init(RNG, cfg)
+
+    def loss(p):
+        return api.loss_fn(p, _batch(cfg), cfg)[0]
+
+    l, g = jax.value_and_grad(loss)(params)
+    assert jnp.isfinite(l)
+    assert all(jnp.isfinite(x).all() for x in jax.tree.leaves(g))
+
+
+@pytest.mark.parametrize("name", ["dense", "gqa1", "ssm", "hybrid", "moe"])
+def test_decode_matches_forward(name):
+    """Greedy decode logits must match teacher-forced forward logits.
+    fp32 compute: this is a numerics-equivalence check, so bf16
+    reduction-order drift (checked separately) must not mask logic bugs."""
+    import dataclasses
+    cfg = dataclasses.replace(CFGS[name], compute_dtype="float32")
+    params = api.init(RNG, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full, _ = api.forward(params, {"tokens": toks}, cfg)
+    cache = api.init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = api.decode_step(params, cache, toks[:, t:t + 1],
+                                    jnp.int32(t), cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    # bf16 compute: tolerate small drift, require same argmax on most steps
+    agree = jnp.mean(
+        (jnp.argmax(dec, -1) == jnp.argmax(full, -1)).astype(jnp.float32))
+    # random-init logits have near-ties, so argmax can flip on 1e-3 diffs;
+    # the value check is the meaningful one
+    assert agree > 0.95, f"decode/forward argmax agreement {agree}"
+    assert jnp.max(jnp.abs(dec - full)) < 5e-2
+
+
+def test_int8_kv_cache_close_to_bf16():
+    cfg = CFGS["dense"]
+    params = api.init(RNG, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    def run(kv_dtype):
+        cache = api.init_cache(cfg, B, S, kv_dtype)
+        outs = []
+        for t in range(S):
+            lg, cache = api.decode_step(params, cache, toks[:, t:t+1],
+                                        jnp.int32(t), cfg)
+            outs.append(lg[:, 0])
+        return jnp.stack(outs, 1)
+    d16 = run("bfloat16")
+    d8 = run("int8")
+    agree = jnp.mean((jnp.argmax(d8, -1) == jnp.argmax(d16, -1)).astype(jnp.float32))
+    assert agree > 0.9, f"int8 KV argmax agreement {agree}"
+
+
+def test_chunked_attention_matches_naive():
+    from repro.models import layers as L
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (2, 33, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (2, 33, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (2, 33, 2, 16))
+    a = L.naive_attention(q, k, v, causal=True)
+    b = L.chunked_attention(q, k, v, causal=True, chunk=8)
+    assert jnp.max(jnp.abs(a - b)) < 1e-4
