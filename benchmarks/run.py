@@ -1,7 +1,11 @@
-"""Benchmark harness: one module per paper table/figure (+ the roofline table
-and the beyond-paper pod benchmarks). Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure (+ the roofline table,
+the engine micro-benchmark and the beyond-paper pod benchmarks). Prints
+``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8] [--quick]
+
+``--quick`` runs the CI smoke subset (engine micro-benchmark + roofline) at
+fast settings.
 """
 from __future__ import annotations
 
@@ -11,6 +15,7 @@ import time
 import traceback
 
 BENCHES = [
+    ("engine", "benchmarks.engine_bench"),
     ("fig1_energy", "benchmarks.fig1_energy"),
     ("fig6_costmodel", "benchmarks.fig6_costmodel"),
     ("fig7_samples", "benchmarks.fig7_samples"),
@@ -24,12 +29,16 @@ BENCHES = [
     ("roofline", "benchmarks.roofline"),
 ]
 
+QUICK = ("engine", "roofline")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sample budgets (slow)")
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke subset (fast settings)")
     args = ap.parse_args()
 
     import importlib
@@ -41,6 +50,8 @@ def main() -> None:
     failures = []
     for name, modname in BENCHES:
         if args.only and args.only not in name:
+            continue
+        if args.quick and name not in QUICK:
             continue
         try:
             mod = importlib.import_module(modname)

@@ -1,3 +1,8 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The NAHAS core: the paper's joint NAS+HAS search stack.
+
+space/nas/has define the symbolic search spaces, controllers the samplers
+(PPO / REINFORCE / evolution), engine the batched+cached EvaluationEngine,
+simulator/costmodel the hardware performance backends, proxy the accuracy
+signals, reward the Eq. 4-6 objective, and search/meshsearch the drivers.
+See docs/architecture.md for how the pieces fit together.
+"""

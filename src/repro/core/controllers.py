@@ -28,12 +28,19 @@ def _init_logits(space: Space) -> list[jnp.ndarray]:
     return [jnp.zeros((len(c),), jnp.float32) for c in space.choices]
 
 
-def _sample_from_logits(logits, rng: np.random.Generator) -> np.ndarray:
-    out = []
-    for lg in logits:
-        p = np.asarray(jax.nn.softmax(lg))
-        out.append(rng.choice(len(p), p=p / p.sum()))
-    return np.array(out, np.int32)
+def _sample_batch(logits, rng: np.random.Generator, n: int) -> np.ndarray:
+    """Draw ``n`` decision vectors. The softmax per decision point is computed
+    once for the whole batch (it dominated per-sample cost as a jax dispatch);
+    the generator is still consumed one categorical draw at a time, in the
+    same (vector, decision) order as the original per-vector loop, so
+    trajectories are unchanged."""
+    probs = [np.asarray(jax.nn.softmax(lg)) for lg in logits]
+    probs = [p / p.sum() for p in probs]
+    out = np.empty((n, len(probs)), np.int32)
+    for i in range(n):
+        for j, p in enumerate(probs):
+            out[i, j] = rng.choice(len(p), p=p)
+    return out
 
 
 def _logp(logits, vec) -> jnp.ndarray:
@@ -89,8 +96,7 @@ class PPOController:
         self._b_init = False
 
     def sample(self, n: int) -> np.ndarray:
-        return np.stack([_sample_from_logits(self.logits, self.rng)
-                         for _ in range(n)])
+        return _sample_batch(self.logits, self.rng, n)
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
         rewards = np.asarray(rewards, np.float32)
@@ -153,8 +159,7 @@ class ReinforceController:
         self.baseline = None
 
     def sample(self, n: int = 1) -> np.ndarray:
-        return np.stack([_sample_from_logits(self.logits, self.rng)
-                         for _ in range(n)])
+        return _sample_batch(self.logits, self.rng, n)
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
         rewards = np.asarray(rewards, np.float32)

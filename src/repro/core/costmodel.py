@@ -11,6 +11,12 @@ Training data is labelled by the analytical simulator ("labelled data for
 accelerator performance is much cheaper than labelled data for NAS accuracy").
 Targets are log-transformed + standardized internally; reported metrics are
 relative errors in the original units.
+
+A trained ``CostModel`` satisfies the ``EvaluationEngine`` predictor protocol
+(``predict(feats (N,F)) -> (latency_ms (N,), area_mm2 (N,))``), so it drops
+into the search as ``joint_search(..., predictor=model)`` — the engine then
+skips the cycle model entirely for the latency/area estimate (Sec. 3.5.2's
+"cost model in the loop"). See ``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -96,21 +102,33 @@ def generate_dataset(
     """Random (α, h) samples labelled by the simulator.
     Returns (features (N,F), latency_ms (N,), area_mm2 (N,)); invalid configs
     are resampled (they get reward -1 in the search itself, but the cost model
-    trains on valid points, matching the paper's setup)."""
+    trains on valid points, matching the paper's setup).
+
+    Labelling goes through the vectorized ``simulator.simulate_batch`` in
+    chunks — this is what keeps "labelling 500k cost-model samples" cheap.
+    Candidates are drawn pairwise in the same order as the original
+    one-at-a-time loop, so the dataset is unchanged for a given seed."""
     rng = np.random.default_rng(seed)
     feats, lats, areas = [], [], []
     while len(feats) < n:
-        av = nas_space.sample(rng)
-        hv = has_space.sample(rng)
-        spec = nas_space.decode(av)
-        h = has_space.decode(hv)
-        res = simulator.simulate_safe(spec, h, batch=batch_size)
-        if res is None:
-            continue
-        feats.append(np.concatenate([nas_space.features(av),
-                                     has_space.features(hv)]))
-        lats.append(res["latency_ms"])
-        areas.append(res["area_mm2"])
+        # capped so a 500k-sample run never materializes all candidate
+        # matrices at once (peak memory stays bounded); floored so the tail
+        # of resampling still amortizes
+        chunk = min(max(64, n - len(feats)), 8192)
+        pairs = [(nas_space.sample(rng), has_space.sample(rng))
+                 for _ in range(chunk)]
+        specs = [nas_space.decode(av) for av, _ in pairs]
+        hs = [has_space.decode(hv) for _, hv in pairs]
+        sims = simulator.simulate_batch(specs, hs, batch=batch_size)
+        for (av, hv), res in zip(pairs, sims):
+            if res is None:
+                continue
+            feats.append(np.concatenate([nas_space.features(av),
+                                         has_space.features(hv)]))
+            lats.append(res["latency_ms"])
+            areas.append(res["area_mm2"])
+            if len(feats) == n:
+                break
     return np.stack(feats), np.array(lats), np.array(areas)
 
 

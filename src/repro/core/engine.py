@@ -1,0 +1,345 @@
+"""Batched, cached candidate evaluation — the hub of the search stack.
+
+Every search driver in ``repro.core.search`` routes candidate evaluation
+through an ``EvaluationEngine``: the controller emits a whole batch of integer
+decision vectors, the engine decodes them, runs validity/latency/energy/area
+through the vectorized simulator path (``simulator.simulate_batch``, one pass
+of numpy over candidates × layers), scores them with the accuracy signal and
+the paper's weighted-product reward (Eq. 4-6), and memoizes the finished
+records in a content-addressed cache keyed on the encoded (α, h) vector —
+repeated samples (common under PPO late in search) are free.
+
+Modes (inferred from the constructor arguments):
+  * joint     — ``nas_space`` + ``has_space``: vec = [α ++ h]  (joint_search)
+  * nas-only  — ``nas_space`` + ``fixed_h``:   vec = α         (fixed_hw_search)
+  * has-only  — ``has_space`` + ``fixed_spec``/``fixed_acc``: vec = h
+                (phase 1 of phase_search)
+
+Backends:
+  * the analytical simulator (default) — exact, still cheap;
+  * any ``predictor`` object with ``predict(feats (N,F)) -> (latency_ms (N,),
+    area_mm2 (N,))`` — e.g. the learned cost model (``costmodel.CostModel``) —
+    as a drop-in replacement for the simulator (paper Sec. 3.5.2). The
+    predictor path still applies the simulator's *static* validity rules
+    (register file / memory / streaming / PE aspect), but not the io-starvation
+    rule, which needs the full cycle model.
+
+``CallableEngine`` wraps an arbitrary per-candidate evaluation function with
+the same batch + cache interface (used by ``repro.core.meshsearch``).
+
+See ``docs/architecture.md`` for the full picture and a worked example of
+plugging in a custom predictor backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import simulator
+from repro.core.proxy import CachedAccuracy
+from repro.core.reward import RewardConfig, reward as reward_fn
+from repro.core.space import Space
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Counters for one engine instance (all monotone)."""
+
+    requested: int = 0    # candidates asked for (cache hits + evaluations)
+    cache_hits: int = 0
+    evaluated: int = 0    # candidates that reached a backend
+    invalid: int = 0      # evaluated candidates the simulator rejected
+    batches: int = 0      # evaluate_batch calls
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / max(self.requested, 1)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        return d
+
+
+def _key(vec: np.ndarray) -> bytes:
+    """Content address of an encoded decision vector."""
+    return np.ascontiguousarray(vec, dtype=np.int64).tobytes()
+
+
+class EvaluationEngine:
+    """Batched + memoized (α, h) → record evaluation (see module docstring)."""
+
+    def __init__(
+        self,
+        nas_space: Optional[Space] = None,
+        has_space: Optional[Space] = None,
+        acc_fn: Optional[Callable] = None,
+        rcfg: Optional[RewardConfig] = None,
+        *,
+        fixed_h=None,
+        fixed_spec=None,
+        fixed_acc: Optional[float] = None,
+        constraint_mode: str = "full",  # "full" | "area_only" (phase-1 HAS)
+        proxy_batch: int = 1,
+        predictor=None,
+        cache: bool = True,
+        max_cache_entries: int = 1_000_000,
+    ):
+        if rcfg is None:
+            raise ValueError("EvaluationEngine needs a RewardConfig")
+        if nas_space is not None and has_space is not None:
+            self.mode = "joint"
+        elif nas_space is not None:
+            if fixed_h is None:
+                raise ValueError("nas-only mode needs fixed_h")
+            self.mode = "nas"
+        elif has_space is not None:
+            if fixed_spec is None or fixed_acc is None:
+                raise ValueError("has-only mode needs fixed_spec and fixed_acc")
+            self.mode = "has"
+        else:
+            raise ValueError("need at least one of nas_space / has_space")
+        if self.mode != "has" and acc_fn is None:
+            raise ValueError("joint / nas-only modes need an accuracy signal")
+        if predictor is not None:
+            if self.mode != "joint":
+                raise ValueError("predictor backend requires joint mode "
+                                 "(it is trained on joint (α, h) features)")
+            if rcfg.energy_target_mj is not None:
+                raise ValueError("predictor backend predicts latency/area "
+                                 "only; use a latency-target RewardConfig")
+        if cache and acc_fn is not None and \
+                not isinstance(acc_fn, CachedAccuracy):
+            # collapses distinct vectors that alias to one architecture; the
+            # signals are deterministic per spec, so records are unchanged
+            acc_fn = CachedAccuracy(acc_fn)
+        self.nas_space = nas_space
+        self.has_space = has_space
+        self.acc_fn = acc_fn
+        self.rcfg = rcfg
+        self.fixed_h = fixed_h
+        self.fixed_spec = fixed_spec
+        self.fixed_acc = fixed_acc
+        self.constraint_mode = constraint_mode
+        self.proxy_batch = proxy_batch
+        self.predictor = predictor
+        self.max_cache_entries = max_cache_entries
+        self._cache: Optional[dict] = {} if cache else None
+        self.stats = EngineStats()
+
+    # ---- public API -------------------------------------------------------
+
+    def evaluate(self, vec: np.ndarray) -> dict:
+        """Single-candidate convenience wrapper around ``evaluate_batch``."""
+        return self.evaluate_batch(np.asarray(vec)[None, :])[0]
+
+    def evaluate_batch(self, vecs: Sequence[np.ndarray]) -> list[dict]:
+        """Evaluate a controller batch; returns one fresh record dict per vec
+        (cached entries are copied, so callers may mutate them freely)."""
+        vecs = np.asarray(vecs)
+        self.stats.batches += 1
+        self.stats.requested += len(vecs)
+        out: list = [None] * len(vecs)
+        missing: list[int] = []
+        if self._cache is None:
+            missing = list(range(len(vecs)))
+        else:
+            # duplicates WITHIN the batch also collapse: only the first
+            # occurrence of a key is evaluated, the rest fan out below
+            pending: dict[bytes, int] = {}
+            for i, v in enumerate(vecs):
+                k = _key(v)
+                rec = self._cache.get(k)
+                if rec is not None:
+                    self.stats.cache_hits += 1
+                    out[i] = dict(rec)
+                elif k in pending:
+                    self.stats.cache_hits += 1
+                    out[i] = pending[k]  # index placeholder, resolved below
+                else:
+                    pending[k] = i
+                    missing.append(i)
+        if missing:
+            recs = self._evaluate_candidates([vecs[i] for i in missing])
+            for i, rec in zip(missing, recs):
+                if self._cache is not None:
+                    if len(self._cache) >= self.max_cache_entries:
+                        self._cache.clear()
+                    self._cache[_key(vecs[i])] = dict(rec)
+                out[i] = rec
+        # resolve within-batch duplicate placeholders into fresh copies
+        for i, r in enumerate(out):
+            if isinstance(r, int):
+                out[i] = dict(out[r])
+        return out
+
+    def evaluate_looped(self, vecs: Sequence[np.ndarray]) -> list[dict]:
+        """Reference implementation: the legacy per-candidate loop
+        (``simulator.simulate_safe`` one candidate at a time, no caching).
+        For simulator-backed engines ``evaluate_batch`` must match this
+        bitwise — the engine tests and the engine micro-benchmark both
+        enforce/report it. Predictor-backed engines have no looped
+        equivalent (this raises)."""
+        if self.predictor is not None:
+            raise ValueError("evaluate_looped is the simulator reference "
+                             "path; this engine uses a predictor backend")
+        out = []
+        for vec in np.asarray(vecs):
+            spec, h = self._decode(vec)
+            sim = simulator.simulate_safe(spec, h, batch=self.proxy_batch)
+            out.append(self._record(sim, spec))
+        return out
+
+    def evaluate_decoded(self, specs: list, hs: list,
+                         batched: bool = True) -> list[dict]:
+        """Evaluation stage only: decoded (spec, h) candidates → records, with
+        no vector decoding or memoization. ``batched=True`` runs the
+        vectorized candidates × layers simulator pass; ``batched=False`` runs
+        the legacy per-candidate loop. The engine micro-benchmark times this
+        pair; both produce bitwise-identical records."""
+        if batched:
+            sims = simulator.simulate_batch(specs, hs, batch=self.proxy_batch)
+        else:
+            sims = [simulator.simulate_safe(s, h, batch=self.proxy_batch)
+                    for s, h in zip(specs, hs)]
+        return [self._record(sim, spec) for sim, spec in zip(sims, specs)]
+
+    def cache_size(self) -> int:
+        return 0 if self._cache is None else len(self._cache)
+
+    # ---- internals --------------------------------------------------------
+
+    def _decode(self, vec: np.ndarray):
+        """vec -> (spec, h)."""
+        if self.mode == "joint":
+            na = self.nas_space.num_decisions
+            return (self.nas_space.decode(vec[:na]),
+                    self.has_space.decode(vec[na:]))
+        if self.mode == "nas":
+            return self.nas_space.decode(vec), self.fixed_h
+        return self.fixed_spec, self.has_space.decode(vec)
+
+    def _decode_batch(self, vecs: np.ndarray):
+        """Batched ``_decode``: one column-wise option lookup per decision
+        point (Space.decode_batch) instead of per (vector, decision)."""
+        if self.mode == "joint":
+            na = self.nas_space.num_decisions
+            return (self.nas_space.decode_batch(vecs[:, :na]),
+                    self.has_space.decode_batch(vecs[:, na:]))
+        if self.mode == "nas":
+            return self.nas_space.decode_batch(vecs), \
+                [self.fixed_h] * len(vecs)
+        return [self.fixed_spec] * len(vecs), \
+            self.has_space.decode_batch(vecs)
+
+    def _record(self, sim: Optional[dict], spec) -> dict:
+        """Assemble one history record (shared by all evaluation paths, so
+        batched/looped records differ only if the backend metrics differ).
+        Pure — stats are counted by evaluate_batch/_evaluate_candidates only,
+        so the reference paths (evaluate_looped/evaluate_decoded) don't skew
+        the engine's counters."""
+        if sim is None:
+            return {
+                "valid": False, "reward": self.rcfg.invalid_reward,
+                "accuracy": 0.0, "latency_ms": None, "energy_mj": None,
+                "area_mm2": None,
+            }
+        acc = self.fixed_acc if self.mode == "has" else self.acc_fn(spec)
+        rcfg = self.rcfg
+        r = reward_fn(acc, sim["latency_ms"], sim["area_mm2"], rcfg,
+                      energy_mj=sim["energy_mj"])
+        if self.constraint_mode == "area_only":
+            meets = sim["area_mm2"] <= rcfg.area_target_mm2
+        else:
+            meets = sim["latency_ms"] <= rcfg.latency_target_ms and \
+                sim["area_mm2"] <= rcfg.area_target_mm2
+            if rcfg.energy_target_mj is not None:
+                meets = sim["energy_mj"] <= rcfg.energy_target_mj and \
+                    sim["area_mm2"] <= rcfg.area_target_mm2
+        energy = sim["energy_mj"]
+        rec = {
+            "valid": True, "meets_constraints": bool(meets),
+            "reward": float(r), "accuracy": float(acc),
+            "latency_ms": float(sim["latency_ms"]),
+            "energy_mj": float(energy) if energy is not None else None,
+            "area_mm2": float(sim["area_mm2"]),
+        }
+        if sim.get("utilization") is not None:
+            rec["utilization"] = float(sim["utilization"])
+        if sim.get("predicted"):
+            rec["predicted"] = True
+        return rec
+
+    def _evaluate_candidates(self, vecs: list) -> list[dict]:
+        self.stats.evaluated += len(vecs)
+        V = np.asarray(vecs)
+        specs, hs = self._decode_batch(V)
+        if self.predictor is not None:
+            sims = self._predict(vecs, specs, hs)
+        else:
+            sims = simulator.simulate_batch(specs, hs, batch=self.proxy_batch)
+        self.stats.invalid += sum(1 for s in sims if s is None)
+        return [self._record(sim, spec) for sim, spec in zip(sims, specs)]
+
+    def _predict(self, vecs: list, specs: list, hs: list) -> list:
+        """Cost-model backend: static validity via the simulator's rules, then
+        latency/area from ``predictor.predict`` on the joint one-hot features
+        (the exact featurization ``costmodel.generate_dataset`` trains on)."""
+        na = self.nas_space.num_decisions
+        feats = np.stack([
+            np.concatenate([self.nas_space.features(v[:na]),
+                            self.has_space.features(v[na:])])
+            for v in vecs
+        ])
+        lat, area = self.predictor.predict(feats)
+        sims: list = []
+        for i, (spec, h) in enumerate(zip(specs, hs)):
+            if simulator.validate(h, simulator.model_weight_bytes(spec)):
+                sims.append(None)
+                continue
+            sims.append({
+                "latency_ms": float(lat[i]), "area_mm2": float(area[i]),
+                "energy_mj": None, "utilization": None, "predicted": True,
+            })
+        return sims
+
+
+class CallableEngine:
+    """The engine's batch + content-addressed-cache interface around an
+    arbitrary per-candidate evaluation function ``eval_fn(vec) -> record``
+    (record must carry a ``"reward"`` key). Used by the pod mesh search;
+    useful whenever a search loop wants memoized evaluation without the
+    (α, h) decoding machinery. Records are shallow-copied on cache hits —
+    keep them flat, or re-copy nested mutables downstream."""
+
+    def __init__(self, eval_fn: Callable[[np.ndarray], dict],
+                 cache: bool = True, max_cache_entries: int = 1_000_000):
+        self.eval_fn = eval_fn
+        self.max_cache_entries = max_cache_entries
+        self._cache: Optional[dict] = {} if cache else None
+        self.stats = EngineStats()
+
+    def evaluate_batch(self, vecs: Sequence[np.ndarray]) -> list[dict]:
+        vecs = np.asarray(vecs)
+        self.stats.batches += 1
+        self.stats.requested += len(vecs)
+        out = []
+        for v in vecs:
+            if self._cache is not None:
+                hit = self._cache.get(_key(v))
+                if hit is not None:
+                    self.stats.cache_hits += 1
+                    out.append(dict(hit))
+                    continue
+            rec = self.eval_fn(v)
+            self.stats.evaluated += 1
+            if not rec.get("valid", True):
+                self.stats.invalid += 1
+            if self._cache is not None:
+                if len(self._cache) >= self.max_cache_entries:
+                    self._cache.clear()
+                self._cache[_key(v)] = dict(rec)
+            out.append(rec)
+        return out

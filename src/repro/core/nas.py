@@ -33,26 +33,52 @@ def _blockwise_space(
             choices.append(Choice(f"b{i}_filters", (0.75, 1.0, 1.25)))
             choices.append(Choice(f"b{i}_groups", (1, 2)))
 
+    # Decoded blocks are memoized per (block index, cin, decisions): BlockSpec
+    # is frozen, so sharing instances across decoded specs is safe, and batch
+    # decoding (EvaluationEngine) skips most dataclasses.replace calls. Key
+    # names are precomputed once (f-strings per decode call added up on the
+    # engine hot path).
+    block_cache: dict = {}
+    _KN = [f"b{i}_kernel" for i in range(len(base.blocks))]
+    _EN = [f"b{i}_exp" for i in range(len(base.blocks))]
+    _ON = [f"b{i}_op" for i in range(len(base.blocks))]
+    _FN = [f"b{i}_filters" for i in range(len(base.blocks))]
+    _GN = [f"b{i}_groups" for i in range(len(base.blocks))]
+
+    def _block(i: int, b: C.BlockSpec, cin: int, d: dict) -> C.BlockSpec:
+        if evolved:
+            key = (i, cin, d[_KN[i]], d.get(_EN[i]),
+                   d[_ON[i]], d[_FN[i]], d[_GN[i]])
+        else:
+            # cin is a function of i alone when filters aren't searched
+            key = (i, d[_KN[i]], d.get(_EN[i]))
+        nb = block_cache.get(key)
+        if nb is not None:
+            return nb
+        nb = replace(
+            b,
+            kernel=d[_KN[i]],
+            expansion=d.get(_EN[i], 1 if i == 0 else b.expansion),
+        )
+        if evolved:
+            filters = max(8, int(round(b.filters * d[_FN[i]] / 8)) * 8)
+            groups = d[_GN[i]]
+            if cin % groups != 0:  # grouped conv must divide cin
+                groups = 1
+            nb = replace(
+                nb,
+                op=d[_ON[i]],
+                filters=filters,
+                groups=groups,
+            )
+        block_cache[key] = nb
+        return nb
+
     def decode(d: dict) -> C.ConvNetSpec:
         blocks = []
         cin = base.stem_filters
         for i, b in enumerate(base.blocks):
-            nb = replace(
-                b,
-                kernel=d[f"b{i}_kernel"],
-                expansion=d.get(f"b{i}_exp", 1 if i == 0 else b.expansion),
-            )
-            if evolved:
-                filters = max(8, int(round(b.filters * d[f"b{i}_filters"] / 8)) * 8)
-                groups = d[f"b{i}_groups"]
-                if cin % groups != 0:  # grouped conv must divide cin
-                    groups = 1
-                nb = replace(
-                    nb,
-                    op=d[f"b{i}_op"],
-                    filters=filters,
-                    groups=groups,
-                )
+            nb = _block(i, b, cin, d)
             blocks.append(nb)
             cin = nb.filters
         return replace(base, blocks=tuple(blocks), name=name)

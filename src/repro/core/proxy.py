@@ -16,6 +16,12 @@ Two paths, both implemented (DESIGN.md §2):
   accuracy (the paper's 5-epoch proxy-task pattern). Used by the tiny-space
   end-to-end example and the integration tests.
 
+* ``CachedAccuracy`` — a memoizing wrapper for either signal, keyed on the
+  (frozen, hashable) ``ConvNetSpec``. The ``EvaluationEngine`` caches whole
+  records by encoded vector; this wrapper additionally collapses *distinct*
+  vectors that decode to the same architecture (common in the evolved space,
+  where infeasible group counts fall back to ``groups=1``).
+
 Every benchmark labels which signal produced its numbers.
 """
 from __future__ import annotations
@@ -59,6 +65,34 @@ class SurrogateAccuracy:
         rng = np.random.default_rng(_spec_hash(spec))
         acc += rng.normal(0.0, self.noise_pct)
         return float(np.clip(acc, 1.0, 99.0)) / 100.0
+
+
+class CachedAccuracy:
+    """Memoizes an accuracy signal by architecture spec (see module docstring).
+
+    The underlying signal must be deterministic per spec — true for both
+    ``SurrogateAccuracy`` (hash-seeded noise) and ``TrainedAccuracy`` (fixed
+    training seed).
+    """
+
+    def __init__(self, fn, max_entries: int = 1_000_000):
+        self.fn = fn
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self._cache: dict = {}
+
+    def __call__(self, spec: C.ConvNetSpec) -> float:
+        acc = self._cache.get(spec)
+        if acc is not None:
+            self.hits += 1
+            return acc
+        self.misses += 1
+        acc = self.fn(spec)
+        if len(self._cache) >= self.max_entries:
+            self._cache.clear()
+        self._cache[spec] = acc
+        return acc
 
 
 @dataclasses.dataclass

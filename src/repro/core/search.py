@@ -10,9 +10,19 @@
                           accelerator with the HARD constraint.
 * ``nested_search``     — outer HAS loop, small inner NAS per hardware sample.
 
+All four drivers evaluate candidates through a
+``repro.core.engine.EvaluationEngine``: each controller batch is decoded and
+simulated in one vectorized pass (``simulator.simulate_batch``) and finished
+records are memoized content-addressed on the encoded (α, h) vector, so
+repeated samples — common under PPO late in search — cost nothing. Pass
+``engine=`` to a driver to substitute a custom backend (e.g. the learned cost
+model via ``EvaluationEngine(..., predictor=cost_model)``); see
+``docs/architecture.md``.
+
 Every driver returns a ``SearchResult`` whose ``history`` carries one record
 per evaluated sample (accuracy, latency, energy, area, reward, validity) —
-the benchmarks build Figs. 1/7/8/9 and Table 3 from these.
+the benchmarks build Figs. 1/7/8/9 and Table 3 from these. ``engine_stats``
+carries the evaluation-cache counters for the run.
 """
 from __future__ import annotations
 
@@ -23,9 +33,9 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import has as has_lib
-from repro.core import simulator
-from repro.core.controllers import CONTROLLERS, PPOController
-from repro.core.reward import RewardConfig, reward as reward_fn
+from repro.core.controllers import CONTROLLERS
+from repro.core.engine import EvaluationEngine
+from repro.core.reward import RewardConfig
 from repro.core.space import Space, concat
 
 
@@ -36,6 +46,7 @@ class SearchConfig:
     controller: str = "ppo"
     seed: int = 0
     proxy_batch: int = 1  # inference batch for the simulator
+    cache: bool = True  # engine memoization of repeated samples
     # hot-start the HAS decision logits at the baseline accelerator ("co-search
     # with hot start", Jiang et al. 2020a — cited in the paper's related work):
     # at small sample budgets the controller then explores AROUND a known-good
@@ -51,6 +62,7 @@ class SearchResult:
     history: list
     space: Space
     wall_s: float
+    engine_stats: Optional[dict] = None
 
     def pareto(self, x_key="latency_ms", y_key="accuracy") -> list[dict]:
         pts = [h for h in self.history if h.get("valid")]
@@ -63,50 +75,10 @@ class SearchResult:
         return out
 
 
-def _evaluate(
-    nas_space: Space,
-    has_space: Optional[Space],
-    vec: np.ndarray,
-    acc_fn: Callable,
-    rcfg: RewardConfig,
-    fixed_h=None,
-    proxy_batch: int = 1,
-) -> dict:
-    if has_space is None:
-        av, hv = vec, None
-        spec = nas_space.decode(av)
-        h = fixed_h
-    else:
-        av, hv = vec[: nas_space.num_decisions], vec[nas_space.num_decisions:]
-        spec = nas_space.decode(av)
-        h = has_space.decode(hv)
-    sim = simulator.simulate_safe(spec, h, batch=proxy_batch)
-    if sim is None:
-        return {
-            "valid": False, "reward": rcfg.invalid_reward, "accuracy": 0.0,
-            "latency_ms": None, "energy_mj": None, "area_mm2": None,
-        }
-    acc = acc_fn(spec)
-    r = reward_fn(acc, sim["latency_ms"], sim["area_mm2"], rcfg,
-                  energy_mj=sim["energy_mj"])
-    meets = sim["latency_ms"] <= rcfg.latency_target_ms and \
-        sim["area_mm2"] <= rcfg.area_target_mm2
-    if rcfg.energy_target_mj is not None:
-        meets = sim["energy_mj"] <= rcfg.energy_target_mj and \
-            sim["area_mm2"] <= rcfg.area_target_mm2
-    return {
-        "valid": True, "meets_constraints": bool(meets), "reward": float(r),
-        "accuracy": float(acc), "latency_ms": float(sim["latency_ms"]),
-        "energy_mj": float(sim["energy_mj"]), "area_mm2": float(sim["area_mm2"]),
-        "utilization": float(sim["utilization"]),
-    }
-
-
-def _drive(space, eval_one, cfg: SearchConfig, warm_has=None) -> SearchResult:
+def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
+           warm_has=None) -> SearchResult:
     ctrl = CONTROLLERS[cfg.controller](space, seed=cfg.seed)
     if warm_has is not None and hasattr(ctrl, "logits"):
-        import jax.numpy as _jnp
-
         offset, base_vec, logit = warm_has
         for i, v in enumerate(base_vec):
             lg = ctrl.logits[offset + i]
@@ -119,9 +91,9 @@ def _drive(space, eval_one, cfg: SearchConfig, warm_has=None) -> SearchResult:
     while n < cfg.samples:
         batch = min(cfg.batch, cfg.samples - n)
         vecs = ctrl.sample(batch)
+        recs = engine.evaluate_batch(vecs)
         rewards = []
-        for v in vecs:
-            rec = eval_one(v)
+        for v, rec in zip(vecs, recs):
             rec["sample_idx"] = n
             history.append(rec)
             rewards.append(rec["reward"])
@@ -139,7 +111,7 @@ def _drive(space, eval_one, cfg: SearchConfig, warm_has=None) -> SearchResult:
         if valid:
             best = max(valid, key=lambda t: t[0]["reward"])[0]
     return SearchResult(best_vec, best, history, space,
-                        time.monotonic() - t0)
+                        time.monotonic() - t0, engine.stats.as_dict())
 
 
 def joint_search(
@@ -148,21 +120,24 @@ def joint_search(
     rcfg: RewardConfig,
     cfg: SearchConfig = SearchConfig(),
     has_space: Optional[Space] = None,
+    engine: Optional[EvaluationEngine] = None,
+    predictor=None,
 ) -> SearchResult:
     has_space = has_space or has_lib.has_space()
     joint = concat(nas_space, has_space)
-
-    def eval_one(vec):
-        return _evaluate(nas_space, has_space, vec, acc_fn, rcfg,
-                         proxy_batch=cfg.proxy_batch)
-
+    if engine is not None and predictor is not None:
+        raise ValueError("pass either engine= or predictor=, not both — "
+                         "a prebuilt engine already fixes its backend")
+    if engine is None:
+        engine = EvaluationEngine(
+            nas_space, has_space, acc_fn, rcfg,
+            proxy_batch=cfg.proxy_batch, cache=cfg.cache, predictor=predictor,
+        )
     warm = None
     if cfg.hot_start and cfg.controller in ("ppo", "reinforce"):
-        import numpy as _np
-
         base = has_lib.baseline_vec(has_space)
         warm = (nas_space.num_decisions, base, cfg.hot_start_logit)
-    return _drive(joint, eval_one, cfg, warm_has=warm)
+    return _drive(joint, engine, cfg, warm_has=warm)
 
 
 def fixed_hw_search(
@@ -171,14 +146,15 @@ def fixed_hw_search(
     rcfg: RewardConfig,
     cfg: SearchConfig = SearchConfig(),
     h=None,
+    engine: Optional[EvaluationEngine] = None,
 ) -> SearchResult:
     h = h or has_lib.BASELINE
-
-    def eval_one(vec):
-        return _evaluate(nas_space, None, vec, acc_fn, rcfg, fixed_h=h,
-                         proxy_batch=cfg.proxy_batch)
-
-    return _drive(nas_space, eval_one, cfg)
+    if engine is None:
+        engine = EvaluationEngine(
+            nas_space, None, acc_fn, rcfg, fixed_h=h,
+            proxy_batch=cfg.proxy_batch, cache=cfg.cache,
+        )
+    return _drive(nas_space, engine, cfg)
 
 
 def phase_search(
@@ -199,26 +175,13 @@ def phase_search(
     soft = dataclasses.replace(rcfg, mode="soft")
     acc0 = acc_fn(spec0)
 
-    def eval_h(hv):
-        sim = simulator.simulate_safe(spec0, hspace.decode(hv),
-                                      batch=cfg.proxy_batch)
-        if sim is None:
-            return {"valid": False, "reward": rcfg.invalid_reward,
-                    "accuracy": 0.0, "latency_ms": None, "energy_mj": None,
-                    "area_mm2": None}
-        r = reward_fn(acc0, sim["latency_ms"], sim["area_mm2"], soft,
-                      energy_mj=sim["energy_mj"])
-        return {
-            "valid": True,
-            "meets_constraints": sim["area_mm2"] <= rcfg.area_target_mm2,
-            "reward": float(r), "accuracy": float(acc0),
-            "latency_ms": float(sim["latency_ms"]),
-            "energy_mj": float(sim["energy_mj"]),
-            "area_mm2": float(sim["area_mm2"]),
-        }
-
+    h_engine = EvaluationEngine(
+        None, hspace, None, soft, fixed_spec=spec0, fixed_acc=acc0,
+        constraint_mode="area_only", proxy_batch=cfg.proxy_batch,
+        cache=cfg.cache,
+    )
     half = dataclasses.replace(cfg, samples=cfg.samples // 2)
-    phase1 = _drive(hspace, eval_h, half)
+    phase1 = _drive(hspace, h_engine, half)
     h_best = (hspace.decode(phase1.best_vec) if phase1.best_vec is not None
               else has_lib.BASELINE)
     phase2 = fixed_hw_search(
@@ -228,7 +191,9 @@ def phase_search(
     )
     history = phase1.history + phase2.history
     return SearchResult(phase2.best_vec, phase2.best_record, history,
-                        nas_space, phase1.wall_s + phase2.wall_s)
+                        nas_space, phase1.wall_s + phase2.wall_s,
+                        {"phase1": phase1.engine_stats,
+                         "phase2": phase2.engine_stats})
 
 
 def nested_search(
@@ -245,6 +210,7 @@ def nested_search(
     history = []
     best, best_vec = None, None
     t0 = time.monotonic()
+    stats: dict = {}
     for o in range(outer):
         hv = hspace.sample(rng)
         h = hspace.decode(hv)
@@ -254,9 +220,13 @@ def nested_search(
             h=h,
         )
         history.extend(res.history)
+        for key, v in res.engine_stats.items():  # aggregate over inner runs
+            if key != "hit_rate":
+                stats[key] = stats.get(key, 0) + v
         if res.best_record is not None and (
             best is None or res.best_record["reward"] > best["reward"]
         ):
             best, best_vec = res.best_record, res.best_vec
+    stats["hit_rate"] = stats["cache_hits"] / max(stats["requested"], 1)
     return SearchResult(best_vec, best, history, nas_space,
-                        time.monotonic() - t0)
+                        time.monotonic() - t0, stats)

@@ -21,6 +21,16 @@ Calibration: the baseline config runs MobileNetV2 @224 in ≈0.30 ms / 0.70 mJ
 
 Everything is vectorized over layers (numpy), so labelling 500k cost-model
 samples is cheap — the property the paper relies on.
+
+Entry points:
+  * ``simulate`` / ``simulate_safe`` — one (spec, h) pair per call (the legacy
+    per-candidate path; raises / returns ``None`` on invalid configs).
+  * ``simulate_batch`` — the batched path behind
+    ``repro.core.engine.EvaluationEngine``: evaluates N (spec, h) candidates
+    in one pass of numpy over candidates × layers (candidates are grouped by
+    layer count so no padding is needed) and is bitwise-identical to calling
+    ``simulate_safe`` per candidate. See ``docs/architecture.md`` for how the
+    search drivers reach this through the engine.
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.has import AcceleratorConfig
-from repro.models.convnets import ConvNetSpec, LayerOp, layer_ops
+from repro.models.convnets import ConvNetSpec, LayerOp, block_rows, layer_ops
 
 # ---- calibrated constants (see module docstring) --------------------------
 _MAC_PJ = 1.30  # pJ per int8 MAC (incl. local data movement)
@@ -201,3 +211,239 @@ def simulate_safe(spec: ConvNetSpec, h: AcceleratorConfig, batch: int = 1):
         return simulate(spec, h, batch=batch, strict=True)
     except InvalidConfig:
         return None
+
+
+# ---------------------------------------------------------------------------
+# Batched path (the EvaluationEngine backend)
+# ---------------------------------------------------------------------------
+# Per-spec layer matrix: one float64 (9, L) array — transposed so that each
+# row (one quantity across layers) is contiguous after np.stack — with rows
+#   [is_dw, h, w, cin, cout, k, stride, groups, out_hw]
+# All values are exact small integers (or products thereof < 2^53), so doing
+# the arithmetic in float64 is bitwise-identical to the int64 arrays the
+# per-candidate path builds in ``_layer_arrays``.
+_ROW = {"is_dw": 0, "h": 1, "w": 2, "cin": 3, "cout": 4, "k": 5,
+        "stride": 6, "groups": 7, "out_hw": 8}
+_MATRIX_CACHE: dict = {}
+_SEG_CACHE: dict = {}  # (block, cin, size) / stem / head -> (9, k) segment
+
+
+def _np_seg(flat: list) -> np.ndarray:
+    m8 = np.fromiter(flat, np.float64, len(flat)).reshape(-1, 8)
+    seg = np.empty((9, m8.shape[0]), np.float64)
+    seg[:8] = m8.T
+    seg[8] = np.ceil(seg[1] / seg[6]) * np.ceil(seg[2] / seg[6])
+    return seg
+
+
+def layer_matrix(spec: ConvNetSpec) -> np.ndarray:
+    """(9, L) float64 per-layer matrix for ``spec`` (cached; read-only).
+    Assembled from per-(block, cin, size) cached segments: the build cost
+    amortizes across candidates that share block configurations even when
+    the full (α, h) vectors are all distinct."""
+    m = _MATRIX_CACHE.get(spec)
+    if m is not None:
+        return m
+    segs = []
+    size = spec.image_size
+    key = ("stem", size, spec.stem_filters)
+    s = _SEG_CACHE.get(key)
+    if s is None:
+        s = _np_seg([0, size, size, 3, spec.stem_filters, 3, 2, 1])
+        _SEG_CACHE[key] = s
+    segs.append(s)
+    size = (size + 1) // 2
+    cin = spec.stem_filters
+    for b in spec.blocks:
+        key = (b, cin, size)
+        s = _SEG_CACHE.get(key)
+        if s is None:
+            flat, _ = block_rows(b, cin, size)
+            s = _np_seg(flat)
+            _SEG_CACHE[key] = s
+        segs.append(s)
+        size = (size + b.stride - 1) // b.stride
+        cin = b.filters
+    key = ("head", size, cin, spec.head_filters, spec.num_classes)
+    s = _SEG_CACHE.get(key)
+    if s is None:
+        s = _np_seg([0, size, size, cin, spec.head_filters, 1, 1, 1,
+                     0, 1, 1, spec.head_filters, spec.num_classes, 1, 1, 1])
+        _SEG_CACHE[key] = s
+    segs.append(s)
+    m = np.concatenate(segs, axis=1)
+    if len(_MATRIX_CACHE) > 65536:
+        _MATRIX_CACHE.clear()
+        _SEG_CACHE.clear()
+    _MATRIX_CACHE[spec] = m
+    return m
+
+
+def model_weight_bytes(spec: ConvNetSpec) -> float:
+    """Total int8 weight bytes of ``spec`` (used for cheap validity checks)."""
+    m = layer_matrix(spec)
+    is_dw = m[0] != 0.0
+    cin, cout, k, groups = m[3], m[4], m[5], m[7]
+    wb = np.where(is_dw, k**2 * cout, k**2 * np.floor_divide(cin, groups) * cout)
+    return float(wb.sum())
+
+
+def simulate_batch(
+    specs: list,
+    hs: list,
+    batch: int = 1,
+) -> list:
+    """Vectorized ``simulate_safe`` over N (spec, h) candidates.
+
+    Returns a list of N entries, each either the same metrics dict ``simulate``
+    produces or ``None`` for invalid candidates. Candidates are grouped by
+    layer count and evaluated with one pass of numpy over candidates × layers;
+    results are bitwise-identical to the per-candidate loop (same operations,
+    same order, same reduction lengths).
+    """
+    n = len(specs)
+    assert len(hs) == n
+    if n == 0:
+        return []
+    results: list = [None] * n
+
+    # per-candidate hardware columns; derived quantities are computed in
+    # numpy with the same expressions (and order) as the AcceleratorConfig
+    # properties, so values are bitwise-identical to the per-candidate path
+    hw = np.array(
+        [(h.pes_x, h.pes_y, h.simd_units, h.compute_lanes, h.simd_width,
+          h.register_file_kb, h.io_bandwidth_gbps, h.frequency_ghz,
+          h.local_memory_mb)
+         for h in hs],
+        np.float64,
+    )
+    pes_x, pes_y = hw[:, 0], hw[:, 1]
+    simd_units, lanes_per_pe, simd_width = hw[:, 2], hw[:, 3], hw[:, 4]
+    rf_kb, io_gbps = hw[:, 5], hw[:, 6]
+    freq, local_mb = hw[:, 7], hw[:, 8]
+    num_pes = pes_x * pes_y
+    lanes = num_pes * lanes_per_pe
+    local = num_pes * local_mb * 2**20  # total_local_memory_bytes
+    io_bpc = io_gbps / freq             # io_bytes_per_cycle
+
+    # area (mirrors area_mm2 term-for-term so results stay bitwise-equal)
+    area = (
+        _AREA["base"]
+        + num_pes * _AREA["pe_base"]
+        + lanes * _AREA["lane"]
+        + lanes * simd_units * _AREA["simd_unit"]
+        + lanes * rf_kb * _AREA["rf_per_kb"]
+        + num_pes * local_mb * _AREA["mem_per_mb"]
+        + io_gbps * _AREA["io_per_gbps"]
+    )
+
+    groups_by_len: dict[int, list[int]] = {}
+    mats = [layer_matrix(s) for s in specs]
+    for i, m in enumerate(mats):
+        groups_by_len.setdefault(m.shape[1], []).append(i)
+
+    for _, idxs in groups_by_len.items():
+        ix = np.asarray(idxs)
+        M = np.stack([mats[i] for i in idxs])  # (g, 9, L)
+        is_dw = M[:, 0] != 0.0
+        h_, w_ = M[:, 1], M[:, 2]
+        cin, cout = M[:, 3], M[:, 4]
+        k, grp = M[:, 5], M[:, 7]
+        out_hw = M[:, 8]
+
+        g_lanes = lanes[ix][:, None]
+        g_simd_units = simd_units[ix][:, None]
+        g_simd_cap = (simd_units[ix] * simd_width[ix])[:, None]
+        g_local = local[ix][:, None]
+        g_io_bpc = io_bpc[ix][:, None]
+
+        # common subexpressions are hoisted verbatim (same ops on the same
+        # inputs as the per-candidate path → bitwise-identical results)
+        k2 = k**2
+        ohw_cout_k2 = out_hw * cout * k2
+        macs = np.where(
+            is_dw,
+            ohw_cout_k2,
+            ohw_cout_k2 * cin / grp,
+        ) * batch
+        weight_bytes = np.where(
+            is_dw, k2 * cout,
+            k2 * np.floor_divide(cin, grp) * cout,
+        )
+        act_in_bytes = h_ * w_ * cin * batch
+        act_out_bytes = out_hw * cout * batch
+        wsum = weight_bytes.sum(axis=1)
+
+        # --- validity (mirrors validate()) ---
+        rf_needed_kb = simd_units[ix] * simd_width[ix] * 6 / 1024
+        invalid = (
+            (rf_kb[ix] < rf_needed_kb)
+            | (local[ix] < 128 * 1024)
+            | ((wsum > 8 * local[ix]) & (io_gbps[ix] < 10))
+            | (np.maximum(pes_x[ix], pes_y[ix])
+               / np.minimum(pes_x[ix], pes_y[ix]) > 4)
+        )
+
+        # --- compute cycles ---
+        out_elems = act_out_bytes  # same expression: out_hw * cout * batch
+        red = k2 * np.where(is_dw, 1, cin / grp)
+        inner_conv = np.ceil(red / g_simd_cap)
+        dw_cycles = np.ceil(out_elems / (g_lanes * g_simd_units)) * k2
+        compute_cycles = np.where(
+            is_dw, dw_cycles, np.ceil(out_elems / g_lanes) * inner_conv
+        )
+
+        # --- io cycles ---
+        weights_resident = wsum <= 0.75 * local[ix]
+        passes = np.maximum(1.0, weight_bytes / np.maximum(g_local, 1.0))
+        act_resident = act_in_bytes + act_out_bytes
+        act_spill = np.maximum(0.0, act_resident - 0.5 * g_local)
+        w_stream = np.where(weights_resident[:, None], 0.0,
+                            weight_bytes * passes)
+        dram_bytes = w_stream + act_spill
+        io_cycles = dram_bytes / g_io_bpc
+
+        io_sum = io_cycles.sum(axis=1)
+        compute_sum_raw = compute_cycles.sum(axis=1)
+        starved = io_sum > 20.0 * compute_sum_raw
+        invalid = invalid | starved
+
+        compute_cycles = compute_cycles / _PIPELINE_EFF
+        layer_cycles = np.maximum(compute_cycles, io_cycles) + \
+            _OP_OVERHEAD_CYCLES
+        total_cycles = layer_cycles.sum(axis=1)
+        latency_s = total_cycles / (freq[ix] * 1e9)
+
+        macs_sum = macs.sum(axis=1)
+        dram_sum = dram_bytes.sum(axis=1)
+        act_sum = act_resident.sum(axis=1)  # act_in_bytes + act_out_bytes
+        dyn_j = (
+            macs_sum * _MAC_PJ * 1e-12
+            + dram_sum * _DRAM_PJ_PER_BYTE * 1e-12
+            + act_sum * _SRAM_PJ_PER_BYTE * 1e-12
+        )
+        g_area = area[ix]
+        leak_j = _LEAKAGE_W_PER_MM2 * g_area * latency_s
+        energy_j = dyn_j + leak_j
+
+        macs_per_cycle = num_pes[ix] * lanes_per_pe[ix] * simd_units[ix] \
+            * simd_width[ix]
+        peak_macs = macs_per_cycle * total_cycles
+        util = macs_sum / np.maximum(peak_macs, 1.0)
+
+        latency_ms = latency_s * 1e3
+        energy_mj = energy_j * 1e3
+        power_w = energy_j / latency_s
+        for row, i in enumerate(idxs):
+            if invalid[row]:
+                continue
+            results[i] = {
+                "latency_ms": float(latency_ms[row]),
+                "energy_mj": float(energy_mj[row]),
+                "power_w": float(power_w[row]),
+                "area_mm2": float(g_area[row]),
+                "utilization": float(util[row]),
+                "macs": float(macs_sum[row]),
+                "dram_bytes": float(dram_sum[row]),
+            }
+    return results

@@ -56,6 +56,24 @@ class Space:
     def to_dict(self, vec: Sequence[int]) -> dict:
         return {c.name: c.options[int(v)] for c, v in zip(self.choices, vec)}
 
+    def to_dict_batch(self, vecs: np.ndarray) -> list[dict]:
+        """Decision dicts for a whole (N, num_decisions) batch at once —
+        option lookup runs per column instead of per (vector, decision), which
+        is what lets the EvaluationEngine decode controller batches cheaply.
+        Equivalent to ``[self.to_dict(v) for v in vecs]``."""
+        vecs = np.asarray(vecs)
+        names = [c.name for c in self.choices]
+        cols = [
+            [c.options[k] for k in vecs[:, j].tolist()]
+            for j, c in enumerate(self.choices)
+        ]
+        return [dict(zip(names, row)) for row in zip(*cols)]
+
+    def decode_batch(self, vecs: np.ndarray) -> list:
+        """Batched ``decode`` (one decoder call per vector, shared option
+        lookup)."""
+        return [self.decoder(d) for d in self.to_dict_batch(vecs)]
+
     def features(self, vec: Sequence[int]) -> np.ndarray:
         """One-hot featurization (the cost model input)."""
         out = []

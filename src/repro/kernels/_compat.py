@@ -1,0 +1,9 @@
+"""Pallas API compatibility shims shared by the kernel modules."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 spells this TPUCompilerParams; newer releases renamed it to
+# CompilerParams. Kernels import the one name from here.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

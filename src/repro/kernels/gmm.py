@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _gmm_kernel(x_ref, w_ref, y_ref, acc_scr):
     di = pl.program_id(3)
@@ -74,7 +76,7 @@ def gmm(
         ),
         out_shape=jax.ShapeDtypeStruct((e, c + pc, f + pf), x.dtype),
         scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")
         ),

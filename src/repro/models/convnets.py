@@ -38,6 +38,17 @@ class BlockSpec:
     se: bool = False  # squeeze-and-excite
     act: str = "relu"  # "relu" | "swish"
 
+    def __hash__(self):
+        # memoized (specs are dict keys on the search hot path: layer-op /
+        # layer-matrix / accuracy caches); same field tuple the generated
+        # __hash__ uses, so hash/eq semantics are unchanged
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.op, self.kernel, self.expansion, self.filters,
+                      self.stride, self.groups, self.se, self.act))
+            object.__setattr__(self, "_hash", h)
+        return h
+
 
 @dataclass(frozen=True)
 class ConvNetSpec:
@@ -48,6 +59,16 @@ class ConvNetSpec:
     num_classes: int = 1000
     image_size: int = 224
     param_dtype: str = "float32"
+
+    def __hash__(self):
+        # memoized; see BlockSpec.__hash__
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.name, self.blocks, self.stem_filters,
+                      self.head_filters, self.num_classes, self.image_size,
+                      self.param_dtype))
+            object.__setattr__(self, "_hash", h)
+        return h
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +327,33 @@ def _layer_ops_impl(spec: ConvNetSpec) -> list[LayerOp]:
     ops.append(LayerOp("conv", size, size, cin, spec.head_filters, 1, 1))
     ops.append(LayerOp("matmul", 1, 1, spec.head_filters, spec.num_classes, 1, 1))
     return ops
+
+
+def block_rows(b: BlockSpec, cin: int, size: int) -> tuple[list, int]:
+    """Flat numeric rows [is_dw, h, w, cin, cout, k, stride, groups] × layers
+    for ONE block applied at input (cin, size); returns (flat, size_out).
+    Mirrors the per-block body of ``_layer_ops_impl`` (column 0 encodes
+    ``op == "dwconv"``) without constructing one dataclass per layer — the
+    batched simulator (repro.core.simulator.layer_matrix) caches the
+    np-ified rows per (block, cin, size), so the build cost amortizes across
+    every candidate sharing a block configuration. The engine parity tests
+    (batched vs looped records) pin the two implementations in sync."""
+    flat: list = []
+    ext = flat.extend
+    mid = cin * b.expansion
+    if b.op == "fused":
+        ext((0, size, size, cin, mid, b.kernel, b.stride, b.groups))
+        size = (size + b.stride - 1) // b.stride
+    else:
+        ext((0, size, size, cin, mid, 1, 1, 1))
+        ext((1, size, size, mid, mid, b.kernel, b.stride, 1))
+        size = (size + b.stride - 1) // b.stride
+    if b.se:
+        se_dim = max(1, cin // 4)
+        ext((0, 1, 1, mid, se_dim, 1, 1, 1))
+        ext((0, 1, 1, se_dim, mid, 1, 1, 1))
+    ext((0, size, size, mid, b.filters, 1, 1, 1))
+    return flat, size
 
 
 def count_params(spec: ConvNetSpec) -> int:

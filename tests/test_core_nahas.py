@@ -4,7 +4,8 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import controllers, costmodel, has, nas, proxy, search, simulator
 from repro.core.reward import RewardConfig, reward

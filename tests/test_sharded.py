@@ -108,6 +108,15 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
+def _has_axis_type() -> bool:
+    import jax.sharding
+
+    return hasattr(jax.sharding, "AxisType")
+
+
+@pytest.mark.skipif(not _has_axis_type(),
+                    reason="needs jax.sharding.AxisType / jax.set_mesh "
+                           "(jax >= 0.5 sharding API)")
 def test_sharded_suite_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
