@@ -3,10 +3,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import nas, proxy, simulator
-from repro.core.reward import RewardConfig
+from repro.core import proxy, simulator
 
 AREA_T = simulator.BASELINE_AREA_MM2
 

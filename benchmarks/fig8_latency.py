@@ -7,9 +7,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import AREA_T, best_acc_at, surrogate
-from repro.core import has, nas, search, simulator
+from repro.core import nas, search
 from repro.core.reward import RewardConfig
-from repro.models import convnets as C
 
 LATENCY_TARGETS_MS = [0.3, 0.5, 0.8, 1.1, 1.3]
 

@@ -28,5 +28,6 @@ def run(fast: bool = True) -> dict:
                f"mem={res['best_hw'].local_memory_mb}MB; "
                f"{cfg.steps} supernet steps in {dt:.0f}s")
     return {"n_evals": cfg.steps, "best_hw": str(res["best_hw"]),
+            "best_sim": sim,
             "valid_frac": len(hist) / max(len(res["history"]), 1),
             "derived": derived}

@@ -24,6 +24,7 @@ BENCHES = [
     ("table3_sota", "benchmarks.table3_sota"),
     ("table4_task2", "benchmarks.table4_task2"),
     ("hw_headroom", "benchmarks.hw_headroom"),
+    ("sweep", "benchmarks.sweep_bench"),
     ("oneshot", "benchmarks.oneshot_bench"),
     ("meshsearch", "benchmarks.meshsearch_bench"),
     ("roofline", "benchmarks.roofline"),

@@ -4,8 +4,6 @@ joint, oneshot weight-sharing) in the small (0.3ms) and medium (0.5ms)
 regimes. Accuracy signal: calibrated surrogate; latency/energy: simulator."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import AREA_T, surrogate
 from repro.core import has, nas, search, simulator
 from repro.core.reward import RewardConfig

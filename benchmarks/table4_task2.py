@@ -5,10 +5,6 @@ paper reports (NAHAS multi-trial beats the fixed baselines; fused-IBN variant
 wins the accuracy-constrained energy comparison)."""
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
 from benchmarks.common import AREA_T, surrogate
 from repro.core import has, nas, search, simulator
 from repro.core.reward import RewardConfig

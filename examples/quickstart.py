@@ -13,8 +13,6 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
-import numpy as np
-
 from repro.core import nas, search, simulator
 from repro.core.proxy import TrainedAccuracy
 from repro.core.reward import RewardConfig

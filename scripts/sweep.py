@@ -1,0 +1,108 @@
+"""Scenario-sweep CLI: N deployment use cases, one shared evaluation memo.
+
+Runs the multi-use-case Pareto co-design sweep (``repro.core.sweep``) over
+named scenario presets (``repro.core.scenarios``) and prints the per-scenario
+best-config table plus the shared-store cache counters, including the
+cross-scenario hit rate.
+
+  PYTHONPATH=src python scripts/sweep.py --preset paper-use-cases --quick
+  PYTHONPATH=src python scripts/sweep.py --preset fig8-latency --space s1_mbv2
+  PYTHONPATH=src python scripts/sweep.py --scenarios lat-0.3ms,edge-sku-nano
+  PYTHONPATH=src python scripts/sweep.py --list
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.core import nas, proxy, scenarios, sweep
+from repro.core.search import SearchConfig
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description="multi-use-case co-design sweep")
+    ap.add_argument("--preset", default=None, help="scenario preset (see --list)")
+    ap.add_argument(
+        "--scenarios", default=None, help="comma-separated scenario/preset names"
+    )
+    ap.add_argument("--driver", default="joint", choices=sorted(sweep.DRIVERS))
+    ap.add_argument("--space", default="s1_mbv2", choices=sorted(nas.SPACES))
+    ap.add_argument(
+        "--samples", type=int, default=256, help="search samples per scenario"
+    )
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--controller", default="ppo")
+    ap.add_argument(
+        "--quick", action="store_true", help="CI-sized run: tiny space, 96 samples"
+    )
+    ap.add_argument(
+        "--no-share",
+        action="store_true",
+        help="ablation: per-scenario private caches instead of the shared store",
+    )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH", help="also write the result as JSON"
+    )
+    ap.add_argument(
+        "--list", action="store_true", help="list scenarios and presets, then exit"
+    )
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+
+    if args.list:
+        print("scenarios:")
+        for name in scenarios.names():
+            print(f"  {name:<18} {scenarios.get(name).describe()}")
+        print("presets:")
+        for name, members in sorted(scenarios.PRESETS.items()):
+            print(f"  {name:<18} {', '.join(members)}")
+        return
+
+    selected: list = []
+    if args.preset:
+        selected.append(args.preset)
+    if args.scenarios:
+        selected.extend(s.strip() for s in args.scenarios.split(",") if s.strip())
+    if not selected:
+        selected.append("paper-use-cases")
+
+    space_name = "tiny" if args.quick else args.space
+    samples = min(args.samples, 96) if args.quick else args.samples
+    space = nas.SPACES[space_name]()
+    cfg = sweep.SweepConfig(
+        driver=args.driver,
+        search=SearchConfig(
+            samples=samples,
+            batch=args.batch,
+            seed=args.seed,
+            controller=args.controller,
+        ),
+        share_cache=not args.no_share,
+    )
+    runner = sweep.SweepRunner(selected, space, proxy.SurrogateAccuracy(), cfg)
+    print(
+        f"sweep: {len(runner.scenarios)} scenarios × {samples} samples, "
+        f"driver={args.driver}, space={space_name}, "
+        f"shared cache={'on' if cfg.share_cache else 'off'}"
+    )
+    result = runner.run(verbose=True)
+    print()
+    print(result.table())
+    print(f"wall: {result.wall_s:.1f}s")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result.as_dict(), f, indent=1, default=str)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

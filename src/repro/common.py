@@ -6,8 +6,7 @@ from any layer of the stack.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, Iterable, Mapping
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -6,9 +6,7 @@ them with a ``MeshConfig`` into a ``RunConfig``.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Optional
+from dataclasses import dataclass, replace
 
 # ---------------------------------------------------------------------------
 # Model

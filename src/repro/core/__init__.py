@@ -4,5 +4,8 @@ space/nas/has define the symbolic search spaces, controllers the samplers
 (PPO / REINFORCE / evolution), engine the batched+cached EvaluationEngine,
 simulator/costmodel the hardware performance backends, proxy the accuracy
 signals, reward the Eq. 4-6 objective, and search/meshsearch the drivers.
+scenarios/pareto/sweep layer the multi-use-case machinery on top: named
+deployment scenarios, the incremental Pareto frontier, and the sweep that
+fans N scenarios over one shared evaluation memo.
 See docs/architecture.md for how the pieces fit together.
 """

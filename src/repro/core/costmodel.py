@@ -21,13 +21,12 @@ skips the cycle model entirely for the latency/area estimate (Sec. 3.5.2's
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import has as has_lib
 from repro.core import simulator
 from repro.core.space import Space
 
@@ -152,7 +151,6 @@ def train(
     x_tr = jnp.asarray(feats[tr])
     y_tr = jnp.asarray(yn[tr])
     x_va = jnp.asarray(feats[va])
-    y_va = jnp.asarray(yn[va])
 
     rng = jax.random.PRNGKey(cfg.seed)
     params = init_mlp(rng, fdim, cfg)

@@ -27,19 +27,33 @@ Backends:
 ``CallableEngine`` wraps an arbitrary per-candidate evaluation function with
 the same batch + cache interface (used by ``repro.core.meshsearch``).
 
+The memo holds *raw* metric records — validity, accuracy, latency, energy,
+area — which are objective-independent; the reward and the feasibility bit are
+recomputed from the raw record against the engine's current ``RewardConfig``
+on every lookup (``score``). That split is what makes the cache reusable
+across objectives: ``set_objective`` rebinds the reward without invalidating a
+single entry, and a ``RecordStore`` passed as ``store=`` shares one memo
+between many engines (the scenario sweep, ``repro.core.sweep``, runs N
+scenarios over one store and reports the cross-scenario hit rate).
+
 See ``docs/architecture.md`` for the full picture and a worked example of
 plugging in a custom predictor backend.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.core import simulator
 from repro.core.proxy import CachedAccuracy
-from repro.core.reward import RewardConfig, reward as reward_fn
+from repro.core.reward import (
+    RewardConfig,
+    meets_constraints as meets_fn,
+    reward_record,
+)
 from repro.core.space import Space
 
 
@@ -68,6 +82,75 @@ def _key(vec: np.ndarray) -> bytes:
     return np.ascontiguousarray(vec, dtype=np.int64).tobytes()
 
 
+@dataclasses.dataclass
+class StoreStats:
+    """Counters for one RecordStore (all monotone)."""
+
+    gets: int = 0        # lookups
+    hits: int = 0
+    cross_hits: int = 0  # hits whose writer label differs from the reader
+    puts: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.gets, 1)
+
+    @property
+    def cross_hit_rate(self) -> float:
+        return self.cross_hits / max(self.gets, 1)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        d["cross_hit_rate"] = self.cross_hit_rate
+        return d
+
+
+class RecordStore:
+    """A content-addressed (α, h) → raw-metric memo shared between engines.
+
+    Entries are keyed on the engine-namespaced encoded vector and tagged with
+    the label of the engine that wrote them, so ``stats.cross_hits`` counts
+    lookups served by a record some *other* scenario (or search phase) paid
+    for — the headline number of the scenario sweep. Raw records carry no
+    reward: every reader re-scores them under its own objective, which is why
+    sharing across objectives is sound.
+    """
+
+    def __init__(self, max_entries: int = 1_000_000):
+        self.max_entries = max_entries
+        self._data: dict[bytes, tuple[dict, Optional[str]]] = {}
+        self.stats = StoreStats()
+        self._pins: list = []
+
+    def pin(self, *objs) -> None:
+        """Keep strong references to the objects whose identity an engine's
+        namespace hashes (accuracy signal, predictor). Engines pin on
+        construction so a store that outlives its engines can never serve a
+        record under a recycled ``id()`` belonging to a different signal."""
+        self._pins.extend(o for o in objs if o is not None)
+
+    def get(self, key: bytes, reader: Optional[str] = None) -> Optional[dict]:
+        self.stats.gets += 1
+        ent = self._data.get(key)
+        if ent is None:
+            return None
+        raw, writer = ent
+        self.stats.hits += 1
+        if writer is not None and writer != reader:
+            self.stats.cross_hits += 1
+        return raw
+
+    def put(self, key: bytes, raw: dict, writer: Optional[str] = None) -> None:
+        if len(self._data) >= self.max_entries:
+            self._data.clear()
+        self._data[key] = (dict(raw), writer)
+        self.stats.puts += 1
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+
 class EvaluationEngine:
     """Batched + memoized (α, h) → record evaluation (see module docstring)."""
 
@@ -86,6 +169,8 @@ class EvaluationEngine:
         predictor=None,
         cache: bool = True,
         max_cache_entries: int = 1_000_000,
+        store: Optional[RecordStore] = None,
+        label: Optional[str] = None,
     ):
         if rcfg is None:
             raise ValueError("EvaluationEngine needs a RewardConfig")
@@ -110,7 +195,7 @@ class EvaluationEngine:
             if rcfg.energy_target_mj is not None:
                 raise ValueError("predictor backend predicts latency/area "
                                  "only; use a latency-target RewardConfig")
-        if cache and acc_fn is not None and \
+        if (cache or store is not None) and acc_fn is not None and \
                 not isinstance(acc_fn, CachedAccuracy):
             # collapses distinct vectors that alias to one architecture; the
             # signals are deterministic per spec, so records are unchanged
@@ -126,8 +211,48 @@ class EvaluationEngine:
         self.proxy_batch = proxy_batch
         self.predictor = predictor
         self.max_cache_entries = max_cache_entries
-        self._cache: Optional[dict] = {} if cache else None
+        # one memo implementation for both flavors: a shared store passed in,
+        # or a private RecordStore when plain cache=True
+        if store is None and cache:
+            store = RecordStore(max_cache_entries)
+        self.store = store
+        self.label = label
+        if self.store is not None:
+            # guard the id()-keyed namespace against address reuse: the store
+            # must outlive every object whose identity it distinguishes
+            acc = self.acc_fn
+            self.store.pin(acc.fn if isinstance(acc, CachedAccuracy) else acc,
+                           predictor)
+        self._ns = self._namespace()
+        # short stable identity of the frozen architecture (has mode) —
+        # drivers stamp it on history records so has-mode vecs from different
+        # fixed specs stay distinguishable in a merged frontier
+        self.fixed_spec_id: Optional[str] = None
+        if fixed_spec is not None:
+            self.fixed_spec_id = hashlib.sha1(
+                repr(fixed_spec).encode()).hexdigest()[:12]
         self.stats = EngineStats()
+
+    def _namespace(self) -> bytes:
+        """Key prefix isolating this engine's raw records inside a shared
+        ``RecordStore``: engines whose *metrics* could differ for the same
+        encoded vector (mode, fixed config, inference batch, backend, accuracy
+        signal) must not collide. Objective (rcfg/constraint_mode) is
+        deliberately absent — raw records are objective-independent, and
+        cross-objective reuse is the point of sharing a store."""
+        acc = self.acc_fn
+        if isinstance(acc, CachedAccuracy):
+            acc = acc.fn
+        ident = repr((
+            self.mode,
+            self.proxy_batch,
+            self.fixed_h,
+            repr(self.fixed_spec),
+            self.fixed_acc,
+            None if acc is None else (type(acc).__name__, id(acc)),
+            None if self.predictor is None else id(self.predictor),
+        ))
+        return hashlib.sha1(ident.encode()).digest()
 
     # ---- public API -------------------------------------------------------
 
@@ -137,24 +262,25 @@ class EvaluationEngine:
 
     def evaluate_batch(self, vecs: Sequence[np.ndarray]) -> list[dict]:
         """Evaluate a controller batch; returns one fresh record dict per vec
-        (cached entries are copied, so callers may mutate them freely)."""
+        (cached raw metrics are re-scored under the current objective on every
+        lookup, so callers may mutate the returned records freely)."""
         vecs = np.asarray(vecs)
         self.stats.batches += 1
         self.stats.requested += len(vecs)
         out: list = [None] * len(vecs)
         missing: list[int] = []
-        if self._cache is None:
+        if self.store is None:
             missing = list(range(len(vecs)))
         else:
             # duplicates WITHIN the batch also collapse: only the first
             # occurrence of a key is evaluated, the rest fan out below
             pending: dict[bytes, int] = {}
             for i, v in enumerate(vecs):
-                k = _key(v)
-                rec = self._cache.get(k)
-                if rec is not None:
+                k = self._vec_key(v)
+                raw = self._lookup(k)
+                if raw is not None:
                     self.stats.cache_hits += 1
-                    out[i] = dict(rec)
+                    out[i] = self.score(raw)
                 elif k in pending:
                     self.stats.cache_hits += 1
                     out[i] = pending[k]  # index placeholder, resolved below
@@ -162,13 +288,10 @@ class EvaluationEngine:
                     pending[k] = i
                     missing.append(i)
         if missing:
-            recs = self._evaluate_candidates([vecs[i] for i in missing])
-            for i, rec in zip(missing, recs):
-                if self._cache is not None:
-                    if len(self._cache) >= self.max_cache_entries:
-                        self._cache.clear()
-                    self._cache[_key(vecs[i])] = dict(rec)
-                out[i] = rec
+            raws = self._evaluate_candidates([vecs[i] for i in missing])
+            for i, raw in zip(missing, raws):
+                self._insert(self._vec_key(vecs[i]), raw)
+                out[i] = self.score(raw)
         # resolve within-batch duplicate placeholders into fresh copies
         for i, r in enumerate(out):
             if isinstance(r, int):
@@ -207,9 +330,58 @@ class EvaluationEngine:
         return [self._record(sim, spec) for sim, spec in zip(sims, specs)]
 
     def cache_size(self) -> int:
-        return 0 if self._cache is None else len(self._cache)
+        return 0 if self.store is None else len(self.store)
+
+    def set_objective(
+        self,
+        rcfg: RewardConfig,
+        constraint_mode: Optional[str] = None,
+        label: Optional[str] = None,
+    ) -> "EvaluationEngine":
+        """Rebind the reward objective (and optionally the constraint mode and
+        the store attribution label) without touching the memo: cached raw
+        metrics re-score under the new objective on their next lookup, so
+        switching scenarios never re-simulates. Returns self for chaining."""
+        if self.predictor is not None and rcfg.energy_target_mj is not None:
+            raise ValueError("predictor backend predicts latency/area only; "
+                             "use a latency-target RewardConfig")
+        self.rcfg = rcfg
+        if constraint_mode is not None:
+            self.constraint_mode = constraint_mode
+        if label is not None:
+            self.label = label
+        return self
+
+    def score(self, raw: dict) -> dict:
+        """Raw metric record + current objective → finished record (always a
+        fresh dict). The reward is Eq. 4-6 over the record's metrics and the
+        feasibility bit honors ``constraint_mode`` — identical semantics to
+        scoring at evaluation time, which is what makes cached raw records
+        exact under objective changes."""
+        if not raw.get("valid", False):
+            return {
+                "valid": False, "reward": self.rcfg.invalid_reward,
+                "accuracy": 0.0, "latency_ms": None, "energy_mj": None,
+                "area_mm2": None,
+            }
+        rec = dict(raw)
+        rec["reward"] = float(reward_record(raw, self.rcfg))
+        rec["meets_constraints"] = meets_fn(raw, self.rcfg,
+                                            self.constraint_mode)
+        return rec
 
     # ---- internals --------------------------------------------------------
+
+    def _vec_key(self, vec: np.ndarray) -> bytes:
+        return self._ns + _key(vec)
+
+    def _lookup(self, k: bytes) -> Optional[dict]:
+        return None if self.store is None else \
+            self.store.get(k, reader=self.label)
+
+    def _insert(self, k: bytes, raw: dict) -> None:
+        if self.store is not None:
+            self.store.put(k, raw, writer=self.label)
 
     def _decode(self, vec: np.ndarray):
         """vec -> (spec, h)."""
@@ -234,34 +406,19 @@ class EvaluationEngine:
         return [self.fixed_spec] * len(vecs), \
             self.has_space.decode_batch(vecs)
 
-    def _record(self, sim: Optional[dict], spec) -> dict:
-        """Assemble one history record (shared by all evaluation paths, so
-        batched/looped records differ only if the backend metrics differ).
-        Pure — stats are counted by evaluate_batch/_evaluate_candidates only,
-        so the reference paths (evaluate_looped/evaluate_decoded) don't skew
-        the engine's counters."""
+    def _raw(self, sim: Optional[dict], spec) -> dict:
+        """One *raw* (objective-independent) metric record — the unit the
+        cache/store memoizes. No reward, no feasibility: those are recomputed
+        by ``score`` under whatever objective the engine holds at lookup
+        time. Pure — stats are counted by evaluate_batch/_evaluate_candidates
+        only, so the reference paths (evaluate_looped/evaluate_decoded) don't
+        skew the engine's counters."""
         if sim is None:
-            return {
-                "valid": False, "reward": self.rcfg.invalid_reward,
-                "accuracy": 0.0, "latency_ms": None, "energy_mj": None,
-                "area_mm2": None,
-            }
+            return {"valid": False}
         acc = self.fixed_acc if self.mode == "has" else self.acc_fn(spec)
-        rcfg = self.rcfg
-        r = reward_fn(acc, sim["latency_ms"], sim["area_mm2"], rcfg,
-                      energy_mj=sim["energy_mj"])
-        if self.constraint_mode == "area_only":
-            meets = sim["area_mm2"] <= rcfg.area_target_mm2
-        else:
-            meets = sim["latency_ms"] <= rcfg.latency_target_ms and \
-                sim["area_mm2"] <= rcfg.area_target_mm2
-            if rcfg.energy_target_mj is not None:
-                meets = sim["energy_mj"] <= rcfg.energy_target_mj and \
-                    sim["area_mm2"] <= rcfg.area_target_mm2
         energy = sim["energy_mj"]
         rec = {
-            "valid": True, "meets_constraints": bool(meets),
-            "reward": float(r), "accuracy": float(acc),
+            "valid": True, "accuracy": float(acc),
             "latency_ms": float(sim["latency_ms"]),
             "energy_mj": float(energy) if energy is not None else None,
             "area_mm2": float(sim["area_mm2"]),
@@ -272,7 +429,14 @@ class EvaluationEngine:
             rec["predicted"] = True
         return rec
 
+    def _record(self, sim: Optional[dict], spec) -> dict:
+        """Assemble one finished history record (shared by all evaluation
+        paths, so batched/looped records differ only if the backend metrics
+        differ)."""
+        return self.score(self._raw(sim, spec))
+
     def _evaluate_candidates(self, vecs: list) -> list[dict]:
+        """Backend pass over cache-missing candidates → raw records."""
         self.stats.evaluated += len(vecs)
         V = np.asarray(vecs)
         specs, hs = self._decode_batch(V)
@@ -281,7 +445,7 @@ class EvaluationEngine:
         else:
             sims = simulator.simulate_batch(specs, hs, batch=self.proxy_batch)
         self.stats.invalid += sum(1 for s in sims if s is None)
-        return [self._record(sim, spec) for sim, spec in zip(sims, specs)]
+        return [self._raw(sim, spec) for sim, spec in zip(sims, specs)]
 
     def _predict(self, vecs: list, specs: list, hs: list) -> list:
         """Cost-model backend: static validity via the simulator's rules, then

@@ -90,7 +90,6 @@ class PodCostModel:
         total_p, active_p = self._param_count()
 
         # ---- memory check (bytes/chip) ----
-        shardable = min(msz, 16)  # TP sharding saturates at head/ff counts
         p_local = total_p * 4 / min(self.chips, msz * (dsz if h["fsdp"] else 1))
         opt_local = 2 * p_local
         tok_local = tokens / max(dsz, 1) / k

@@ -9,10 +9,7 @@ S3  (Sec. 3.2.2): the evolved EdgeTPU space — adds per-layer op type
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import replace
-
-import numpy as np
 
 from repro.core.space import Choice, Space
 from repro.models import convnets as C

@@ -23,9 +23,8 @@ expensive when the search space is larger").
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import replace
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,116 @@
+"""Incremental Pareto-frontier tracking over evaluated (α, h) records.
+
+The sweep's accumulator: every record any scenario's search evaluates is
+offered to one global ``ParetoFrontier`` over (accuracy ↑, latency ↓,
+energy ↓, area ↓). Because the Eq. 4-6 reward is monotone in each metric and
+feasibility only tightens as costs fall, the frontier contains a best record
+for *every* scenario (any monotone scalarization + constraint filtering):
+``frontier.best(scenario)`` answers "what would this use case pick?" without
+re-running a search — scenarios added after the fact get served from records
+other scenarios paid for.
+
+Records with a missing metric (``None`` — e.g. predictor-backed records have
+no energy) are treated as worst-possible on that objective, so fully measured
+records dominate them but they still participate on the metrics they do have.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Mapping, Optional, Sequence
+
+Objective = tuple[str, str]  # (record key, "min" | "max")
+
+DEFAULT_OBJECTIVES: tuple[Objective, ...] = (
+    ("accuracy", "max"),
+    ("latency_ms", "min"),
+    ("energy_mj", "min"),
+    ("area_mm2", "min"),
+)
+
+
+def _canon(record: Mapping, objectives: Sequence[Objective]) -> tuple:
+    """Record → canonical cost tuple (smaller is better on every axis)."""
+    vals = []
+    for key, sense in objectives:
+        v = record.get(key)
+        if sense == "max":
+            vals.append(math.inf if v is None else -float(v))
+        else:
+            vals.append(math.inf if v is None else float(v))
+    return tuple(vals)
+
+
+def _dominates(a: tuple, b: tuple) -> bool:
+    """Canonical-tuple dominance: a no-worse everywhere, better somewhere."""
+    return all(x <= y for x, y in zip(a, b)) and a != b
+
+
+def dominates(
+    a: Mapping,
+    b: Mapping,
+    objectives: Sequence[Objective] = DEFAULT_OBJECTIVES,
+) -> bool:
+    """True when record ``a`` Pareto-dominates record ``b``."""
+    return _dominates(_canon(a, objectives), _canon(b, objectives))
+
+
+class ParetoFrontier:
+    """A mutually non-dominated set of records, maintained incrementally.
+
+    ``add`` is O(frontier size) per record: a candidate dominated by (or
+    metric-identical to) a member is rejected; otherwise it joins and evicts
+    every member it dominates. Only valid records participate. Stored records
+    are copied on the way in and handed out as copies, so callers may mutate
+    freely.
+    """
+
+    def __init__(self, objectives: Sequence[Objective] = DEFAULT_OBJECTIVES):
+        self.objectives = tuple(objectives)
+        self._points: list[tuple[tuple, dict]] = []
+        self.offered = 0   # records seen (valid or not)
+        self.admitted = 0  # records that (at the time) joined the frontier
+
+    def add(self, record: Mapping) -> bool:
+        """Offer one record; returns True when it joins the frontier."""
+        self.offered += 1
+        if not record.get("valid", False):
+            return False
+        v = _canon(record, self.objectives)
+        for pv, _ in self._points:
+            if pv == v or _dominates(pv, v):
+                return False
+        keep = [t for t in self._points if not _dominates(v, t[0])]
+        self._points = keep
+        self._points.append((v, dict(record)))
+        self.admitted += 1
+        return True
+
+    def add_many(self, records: Iterable[Mapping]) -> int:
+        return sum(self.add(r) for r in records)
+
+    def merge(self, other: "ParetoFrontier") -> int:
+        return self.add_many(r for _, r in other._points)
+
+    def records(self) -> list[dict]:
+        """Frontier members, best-accuracy-first, as fresh dicts."""
+        return [dict(r) for _, r in sorted(self._points, key=lambda t: t[0])]
+
+    def feasible(self, scenario) -> list[dict]:
+        """Frontier members meeting ``scenario``'s hard constraints."""
+        return [r for r in self.records() if scenario.feasible(r)]
+
+    def best(self, scenario) -> Optional[dict]:
+        """The frontier record ``scenario`` would select: argmax of the
+        scenario's Eq. 4-6 score over its feasible members, falling back to
+        all members when nothing is feasible (the soft-constraint regime —
+        violations are penalized by the score itself). None when empty."""
+        pool = self.feasible(scenario) or self.records()
+        if not pool:
+            return None
+        return max(pool, key=scenario.score)
+
+    def __len__(self) -> int:
+        return len(self._points)
+
+    def __iter__(self):
+        return iter(self.records())

@@ -4,11 +4,17 @@
 
     w = p  if the metric meets its target, q otherwise.
     hard constraint: p=0, q=-1   soft constraint: p=q=-0.07
+
+``reward`` scores loose metrics; ``reward_record`` / ``meets_constraints``
+score a finished metric record against any ``RewardConfig`` — the raw
+(α, h) → metrics map is objective-independent, so cached records can be
+re-scored under a new objective (a different scenario) without touching the
+simulator. The scenario sweep (``repro.core.sweep``) is built on this.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Mapping, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,3 +60,47 @@ def reward(
     if w1 != 0.0:
         r = r * (area_ratio ** w1)
     return float(r)
+
+
+def reward_record(record: Mapping, cfg: RewardConfig) -> float:
+    """Eq. 4-6 recomputed from a finished metric record.
+
+    ``record`` is any mapping with the engine's raw metric keys (``valid``,
+    ``accuracy``, ``latency_ms``, ``energy_mj``, ``area_mm2``). Records that
+    lack the metric the objective needs (e.g. predictor-backed records have no
+    energy under an energy-target config) score ``cfg.invalid_reward`` — they
+    cannot be certified against that objective.
+    """
+    if not record.get("valid", False):
+        return cfg.invalid_reward
+    if cfg.energy_target_mj is not None and record.get("energy_mj") is None:
+        return cfg.invalid_reward
+    return reward(
+        record["accuracy"],
+        record["latency_ms"],
+        record["area_mm2"],
+        cfg,
+        energy_mj=record.get("energy_mj"),
+    )
+
+
+def meets_constraints(
+    record: Mapping, cfg: RewardConfig, constraint_mode: str = "full"
+) -> bool:
+    """Hard-feasibility of a metric record under ``cfg``'s targets.
+
+    Mirrors the engine's record semantics: with an energy target the energy
+    metric replaces latency as the performance constraint (Sec. 3.4), and
+    ``constraint_mode="area_only"`` checks chip area alone (phase-1 HAS).
+    """
+    if not record.get("valid", False):
+        return False
+    area_ok = record["area_mm2"] <= cfg.area_target_mm2
+    if constraint_mode == "area_only":
+        return bool(area_ok)
+    if cfg.energy_target_mj is not None:
+        energy = record.get("energy_mj")
+        return bool(
+            energy is not None and energy <= cfg.energy_target_mj and area_ok
+        )
+    return bool(record["latency_ms"] <= cfg.latency_target_ms and area_ok)

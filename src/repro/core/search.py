@@ -20,9 +20,18 @@ model via ``EvaluationEngine(..., predictor=cost_model)``); see
 ``docs/architecture.md``.
 
 Every driver returns a ``SearchResult`` whose ``history`` carries one record
-per evaluated sample (accuracy, latency, energy, area, reward, validity) —
-the benchmarks build Figs. 1/7/8/9 and Table 3 from these. ``engine_stats``
-carries the evaluation-cache counters for the run.
+per evaluated sample (accuracy, latency, energy, area, reward, validity, the
+encoded decision vector, and — when searching for a scenario — the scenario
+name) — the benchmarks build Figs. 1/7/8/9 and Table 3 from these, and any
+record drops straight into a ``repro.core.pareto.ParetoFrontier``
+(``SearchResult.frontier()``). ``engine_stats`` carries the evaluation-cache
+counters for the run.
+
+Drivers accept the objective either as an explicit ``RewardConfig`` or as a
+named ``Scenario`` (``scenario=``, see ``repro.core.scenarios``); passing
+``SearchConfig(store=RecordStore())`` shares one raw-metric memo across every
+engine the driver builds — and across drivers/scenarios, which is how the
+scenario sweep (``repro.core.sweep``) amortizes evaluation.
 """
 from __future__ import annotations
 
@@ -34,8 +43,10 @@ import numpy as np
 
 from repro.core import has as has_lib
 from repro.core.controllers import CONTROLLERS
-from repro.core.engine import EvaluationEngine
+from repro.core.engine import EvaluationEngine, RecordStore
+from repro.core.pareto import DEFAULT_OBJECTIVES, ParetoFrontier
 from repro.core.reward import RewardConfig
+from repro.core.scenarios import Scenario
 from repro.core.space import Space, concat
 
 
@@ -53,6 +64,9 @@ class SearchConfig:
     # design instead of uniformly over the (mostly invalid) joint space
     hot_start: bool = True
     hot_start_logit: float = 1.5
+    # share one raw-metric memo across every engine this config builds (and
+    # across runs reusing the same store) — see engine.RecordStore
+    store: Optional[RecordStore] = None
 
 
 @dataclasses.dataclass
@@ -74,9 +88,27 @@ class SearchResult:
                 best_y = p[y_key]
         return out
 
+    def frontier(self, objectives=DEFAULT_OBJECTIVES) -> ParetoFrontier:
+        """The run's history folded into an incremental Pareto frontier over
+        (accuracy, latency, energy, area) — see ``repro.core.pareto``."""
+        f = ParetoFrontier(objectives)
+        f.add_many(self.history)
+        return f
+
+
+def _objective(rcfg: Optional[RewardConfig],
+               scenario: Optional[Scenario]) -> RewardConfig:
+    """An explicit RewardConfig wins; otherwise the scenario supplies it."""
+    if rcfg is not None:
+        return rcfg
+    if scenario is None:
+        raise ValueError("pass a RewardConfig (rcfg=) or a Scenario "
+                         "(scenario=)")
+    return scenario.reward_config()
+
 
 def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
-           warm_has=None) -> SearchResult:
+           warm_has=None, scenario: Optional[Scenario] = None) -> SearchResult:
     ctrl = CONTROLLERS[cfg.controller](space, seed=cfg.seed)
     if warm_has is not None and hasattr(ctrl, "logits"):
         offset, base_vec, logit = warm_has
@@ -95,6 +127,20 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
         rewards = []
         for v, rec in zip(vecs, recs):
             rec["sample_idx"] = n
+            # frontier-ready annotations: enough identity to reconstruct the
+            # full (α, h) config from any record — the sampled decision
+            # vector plus its space name (HAS- and NAS-space index tuples
+            # would otherwise alias in one frontier), the frozen accelerator
+            # for nas-mode engines, and the scenario that paid for the
+            # evaluation
+            rec["vec"] = tuple(int(x) for x in v)
+            rec["space"] = space.name
+            if engine.mode == "nas":
+                rec["fixed_h"] = dataclasses.astuple(engine.fixed_h)
+            elif engine.mode == "has":
+                rec["fixed_spec_id"] = engine.fixed_spec_id
+            if scenario is not None:
+                rec["scenario"] = scenario.name
             history.append(rec)
             rewards.append(rec["reward"])
             if rec["valid"] and rec.get("meets_constraints") and (
@@ -117,12 +163,14 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
 def joint_search(
     nas_space: Space,
     acc_fn: Callable,
-    rcfg: RewardConfig,
+    rcfg: Optional[RewardConfig] = None,
     cfg: SearchConfig = SearchConfig(),
     has_space: Optional[Space] = None,
     engine: Optional[EvaluationEngine] = None,
     predictor=None,
+    scenario: Optional[Scenario] = None,
 ) -> SearchResult:
+    rcfg = _objective(rcfg, scenario)
     has_space = has_space or has_lib.has_space()
     joint = concat(nas_space, has_space)
     if engine is not None and predictor is not None:
@@ -132,41 +180,48 @@ def joint_search(
         engine = EvaluationEngine(
             nas_space, has_space, acc_fn, rcfg,
             proxy_batch=cfg.proxy_batch, cache=cfg.cache, predictor=predictor,
+            store=cfg.store,
+            label=None if scenario is None else scenario.name,
         )
     warm = None
     if cfg.hot_start and cfg.controller in ("ppo", "reinforce"):
         base = has_lib.baseline_vec(has_space)
         warm = (nas_space.num_decisions, base, cfg.hot_start_logit)
-    return _drive(joint, engine, cfg, warm_has=warm)
+    return _drive(joint, engine, cfg, warm_has=warm, scenario=scenario)
 
 
 def fixed_hw_search(
     nas_space: Space,
     acc_fn: Callable,
-    rcfg: RewardConfig,
+    rcfg: Optional[RewardConfig] = None,
     cfg: SearchConfig = SearchConfig(),
     h=None,
     engine: Optional[EvaluationEngine] = None,
+    scenario: Optional[Scenario] = None,
 ) -> SearchResult:
+    rcfg = _objective(rcfg, scenario)
     h = h or has_lib.BASELINE
     if engine is None:
         engine = EvaluationEngine(
             nas_space, None, acc_fn, rcfg, fixed_h=h,
-            proxy_batch=cfg.proxy_batch, cache=cfg.cache,
+            proxy_batch=cfg.proxy_batch, cache=cfg.cache, store=cfg.store,
+            label=None if scenario is None else scenario.name,
         )
-    return _drive(nas_space, engine, cfg)
+    return _drive(nas_space, engine, cfg, scenario=scenario)
 
 
 def phase_search(
     nas_space: Space,
     acc_fn: Callable,
-    rcfg: RewardConfig,
+    rcfg: Optional[RewardConfig] = None,
     cfg: SearchConfig = SearchConfig(),
     initial_arch_vec: Optional[np.ndarray] = None,
+    scenario: Optional[Scenario] = None,
 ) -> SearchResult:
     """Fig. 9: phase 1 = HAS on a fixed initial architecture (soft constraint),
     phase 2 = NAS on the selected accelerator (hard constraint). The sample
     budget is split between the phases."""
+    rcfg = _objective(rcfg, scenario)
     hspace = has_lib.has_space()
     rng = np.random.default_rng(cfg.seed)
     a0 = (initial_arch_vec if initial_arch_vec is not None
@@ -178,16 +233,17 @@ def phase_search(
     h_engine = EvaluationEngine(
         None, hspace, None, soft, fixed_spec=spec0, fixed_acc=acc0,
         constraint_mode="area_only", proxy_batch=cfg.proxy_batch,
-        cache=cfg.cache,
+        cache=cfg.cache, store=cfg.store,
+        label=None if scenario is None else scenario.name,
     )
     half = dataclasses.replace(cfg, samples=cfg.samples // 2)
-    phase1 = _drive(hspace, h_engine, half)
+    phase1 = _drive(hspace, h_engine, half, scenario=scenario)
     h_best = (hspace.decode(phase1.best_vec) if phase1.best_vec is not None
               else has_lib.BASELINE)
     phase2 = fixed_hw_search(
         nas_space, acc_fn, rcfg,
         dataclasses.replace(cfg, samples=cfg.samples - half.samples),
-        h=h_best,
+        h=h_best, scenario=scenario,
     )
     history = phase1.history + phase2.history
     return SearchResult(phase2.best_vec, phase2.best_record, history,
@@ -199,11 +255,13 @@ def phase_search(
 def nested_search(
     nas_space: Space,
     acc_fn: Callable,
-    rcfg: RewardConfig,
+    rcfg: Optional[RewardConfig] = None,
     cfg: SearchConfig = SearchConfig(),
     outer: int = 8,
+    scenario: Optional[Scenario] = None,
 ) -> SearchResult:
     """Outer loop over hardware samples; a small NAS per hardware config."""
+    rcfg = _objective(rcfg, scenario)
     hspace = has_lib.has_space()
     rng = np.random.default_rng(cfg.seed)
     inner_budget = max(cfg.samples // outer, 4)
@@ -217,7 +275,7 @@ def nested_search(
         res = fixed_hw_search(
             nas_space, acc_fn, rcfg,
             dataclasses.replace(cfg, samples=inner_budget, seed=cfg.seed + o),
-            h=h,
+            h=h, scenario=scenario,
         )
         history.extend(res.history)
         for key, v in res.engine_stats.items():  # aggregate over inner runs

@@ -34,14 +34,12 @@ Entry points:
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Optional
 
 import numpy as np
 
 from repro.core.has import AcceleratorConfig
-from repro.models.convnets import ConvNetSpec, LayerOp, block_rows, layer_ops
+from repro.models.convnets import ConvNetSpec, block_rows, layer_ops
 
 # ---- calibrated constants (see module docstring) --------------------------
 _MAC_PJ = 1.30  # pJ per int8 MAC (incl. local data movement)

@@ -8,7 +8,6 @@ are integer vectors (one index per decision), which keeps controllers simple
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable, Sequence
 
 import numpy as np
@@ -98,7 +97,6 @@ class Space:
 
 def concat(a: Space, b: Space, decoder=None, name="joint") -> Space:
     """The paper's unified joint space: NAS ++ HAS decision points."""
-    na = a.num_decisions
 
     def dec(d):
         da = {c.name: d[c.name] for c in a.choices}

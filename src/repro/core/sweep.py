@@ -1,0 +1,248 @@
+"""Multi-use-case Pareto co-design sweeps over one shared evaluation memo.
+
+The paper's observation that "different use cases lead to very different
+search outcomes" turns, in production, into a fleet question: given N
+deployment scenarios (latency-, energy- and area-bounded SKUs, hard and soft
+constraint modes), find each one's best (α, h) pair without paying N full
+evaluation bills. The raw (α, h) → metrics map is objective-independent, so
+the sweep runs every scenario's search through **one** ``RecordStore``
+(`repro.core.engine`): any candidate a scenario re-visits — or that *another*
+scenario already paid for — is served from memory and merely re-scored under
+the new objective (Eq. 4-6 from the record, no simulation). On top, every
+record is folded into one global Pareto frontier over (accuracy, latency,
+energy, area); per-scenario winners are read off the frontier with
+per-scenario constraint filtering, so scenario B can select a configuration
+scenario A discovered (the semi-decoupled pattern of Lu et al. 2022).
+
+    from repro.core import nas, proxy, sweep
+
+    result = sweep.SweepRunner(
+        "paper-use-cases", nas.tiny_space(), proxy.SurrogateAccuracy(),
+        sweep.SweepConfig(search=search.SearchConfig(samples=200)),
+    ).run()
+    print(result.table())
+
+``scripts/sweep.py`` is the CLI; ``benchmarks/sweep_bench.py`` reproduces the
+use-case-divergence result as a table of best configs per scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.core import has as has_lib
+from repro.core import scenarios as scenarios_lib
+from repro.core import search as search_lib
+from repro.core.engine import RecordStore
+from repro.core.pareto import DEFAULT_OBJECTIVES, ParetoFrontier
+from repro.core.proxy import CachedAccuracy
+from repro.core.scenarios import Scenario
+from repro.core.search import SearchConfig, SearchResult
+from repro.core.space import Space
+
+DRIVERS = {
+    "joint": search_lib.joint_search,
+    "fixed_hw": search_lib.fixed_hw_search,
+    "phase": search_lib.phase_search,
+    "nested": search_lib.nested_search,
+}
+
+
+@dataclasses.dataclass
+class SweepConfig:
+    driver: str = "joint"  # joint | fixed_hw | phase | nested
+    search: SearchConfig = dataclasses.field(default_factory=SearchConfig)
+    # one raw-metric memo across all scenarios (False = per-scenario engines
+    # with private caches — the ablation `benchmarks/sweep_bench.py` reports)
+    share_cache: bool = True
+    objectives: tuple = DEFAULT_OBJECTIVES
+
+
+@dataclasses.dataclass
+class ScenarioOutcome:
+    """One scenario's slice of a sweep."""
+
+    scenario: Scenario
+    result: SearchResult
+    best: Optional[dict]  # frontier-selected best (≥ the run's own best)
+
+    @property
+    def feasible(self) -> bool:
+        """Whether the selected best meets the scenario's hard constraints —
+        False flags a best-effort fallback pick (nothing on the frontier was
+        feasible, e.g. an over-tight hard target or a soft-mode scenario)."""
+        return self.best is not None and self.scenario.feasible(self.best)
+
+    def as_dict(self) -> dict:
+        return {
+            "scenario": self.scenario.name,
+            "targets": self.scenario.describe(),
+            "best": self.best,
+            "feasible": self.feasible,
+            "samples": len(self.result.history),
+            "wall_s": self.result.wall_s,
+            "engine_stats": self.result.engine_stats,
+        }
+
+
+@dataclasses.dataclass
+class SweepResult:
+    outcomes: list[ScenarioOutcome]
+    frontier: ParetoFrontier
+    store_stats: Optional[dict]  # None when share_cache=False
+    wall_s: float
+
+    @property
+    def cross_scenario_hit_rate(self) -> float:
+        if not self.store_stats:
+            return 0.0
+        return self.store_stats["cross_hit_rate"]
+
+    def best_by_scenario(self) -> dict[str, Optional[dict]]:
+        return {o.scenario.name: o.best for o in self.outcomes}
+
+    def table(self) -> str:
+        """Per-scenario best-config table + shared-cache counters."""
+        hdr = (
+            f"{'scenario':<18} {'targets':<34} {'acc%':>6} {'lat_ms':>8} "
+            f"{'mJ':>7} {'mm2':>7} {'feas':>5}  config"
+        )
+        lines = [hdr, "-" * len(hdr)]
+        for o in self.outcomes:
+            b = o.best
+            if b is None:
+                lines.append(
+                    f"{o.scenario.name:<18} "
+                    f"{o.scenario.describe():<34} (no valid record)"
+                )
+                continue
+            energy = b.get("energy_mj")
+            e_str = "   None" if energy is None else f"{energy:>7.4f}"
+            lines.append(
+                f"{o.scenario.name:<18} {o.scenario.describe():<34} "
+                f"{b['accuracy'] * 100:>6.2f} {b['latency_ms']:>8.4f} "
+                f"{e_str} {b['area_mm2']:>7.1f} "
+                f"{str(o.feasible):>5}  "
+                f"vec={b.get('vec')}"
+            )
+        lines.append("")
+        lines.append(
+            f"pareto frontier: {len(self.frontier)} points from "
+            f"{self.frontier.offered} records"
+        )
+        if self.store_stats:
+            s = self.store_stats
+            lines.append(
+                f"shared store: {s['puts']} evaluations for {s['gets']} "
+                f"lookups — hit rate {s['hit_rate']:.1%}, cross-scenario "
+                f"hit rate {s['cross_hit_rate']:.1%}"
+            )
+        return "\n".join(lines)
+
+    def as_dict(self) -> dict:
+        return {
+            "outcomes": [o.as_dict() for o in self.outcomes],
+            "frontier": self.frontier.records(),
+            "store_stats": self.store_stats,
+            "cross_scenario_hit_rate": self.cross_scenario_hit_rate,
+            "wall_s": self.wall_s,
+        }
+
+
+class SweepRunner:
+    """Fan N scenarios over one search driver and one shared evaluation memo.
+
+    ``scenarios`` accepts anything ``scenarios.expand`` does: preset names
+    ("paper-use-cases"), scenario names, ``Scenario`` objects, or a mix.
+    Every scenario runs the same driver at the same sample budget and seed —
+    identical seeds are deliberate: scenario searches then start from the same
+    controller state and diverge only where their objectives pull them apart,
+    which both isolates the use-case effect (the paper's comparison) and
+    maximizes cross-scenario cache sharing early in the runs.
+    """
+
+    def __init__(
+        self,
+        scenarios,
+        nas_space: Space,
+        acc_fn: Callable,
+        cfg: Optional[SweepConfig] = None,
+        has_space: Optional[Space] = None,
+    ):
+        self.scenarios = scenarios_lib.expand(scenarios)
+        self.nas_space = nas_space
+        self.cfg = cfg or SweepConfig()
+        if self.cfg.driver not in DRIVERS:
+            raise ValueError(
+                f"unknown driver {self.cfg.driver!r} "
+                f"(one of {sorted(DRIVERS)})"
+            )
+        if has_space is not None and self.cfg.driver != "joint":
+            # fixed_hw/phase/nested build their own accelerator side and
+            # would silently ignore a custom space
+            raise ValueError(
+                f"has_space is only honored by the 'joint' driver, "
+                f"not {self.cfg.driver!r}"
+            )
+        self.has_space = has_space or has_lib.has_space()
+        # one memoized accuracy signal for the whole sweep: engines built for
+        # different scenarios then share architecture evaluations too, and
+        # identical acc_fn identity keeps their store namespaces aligned
+        if not isinstance(acc_fn, CachedAccuracy):
+            acc_fn = CachedAccuracy(acc_fn)
+        self.acc_fn = acc_fn
+
+    def run(self, verbose: bool = False) -> SweepResult:
+        cfg = self.cfg
+        # honor a caller-provided store (cross-run / cross-sweep reuse);
+        # otherwise build one per run when sharing is on
+        store = cfg.search.store
+        if store is None and cfg.share_cache:
+            store = RecordStore()
+        frontier = ParetoFrontier(cfg.objectives)
+        driver = DRIVERS[cfg.driver]
+        scfg = dataclasses.replace(cfg.search, store=store)
+        t0 = time.monotonic()
+        results: list[tuple[Scenario, SearchResult]] = []
+        for sc in self.scenarios:
+            if verbose:
+                print(
+                    f"[sweep] {sc.name}: {sc.describe()} "
+                    f"({cfg.driver}, {scfg.samples} samples)",
+                    flush=True,
+                )
+            if cfg.driver == "joint":
+                res = driver(
+                    self.nas_space,
+                    self.acc_fn,
+                    cfg=scfg,
+                    has_space=self.has_space,
+                    scenario=sc,
+                )
+            else:
+                res = driver(self.nas_space, self.acc_fn, cfg=scfg, scenario=sc)
+            frontier.add_many(res.history)
+            results.append((sc, res))
+        # select winners off the *global* frontier: a scenario may pick a
+        # config some other scenario's search discovered (reward and
+        # feasibility are monotone in the four metrics, so the frontier always
+        # contains an optimal record for every scenario)
+        outcomes = [ScenarioOutcome(sc, res, frontier.best(sc)) for sc, res in results]
+        return SweepResult(
+            outcomes=outcomes,
+            frontier=frontier,
+            store_stats=None if store is None else store.stats.as_dict(),
+            wall_s=time.monotonic() - t0,
+        )
+
+
+def run_sweep(
+    scenarios,
+    nas_space: Space,
+    acc_fn: Callable,
+    cfg: Optional[SweepConfig] = None,
+    **kw,
+) -> SweepResult:
+    """Functional convenience wrapper around ``SweepRunner``."""
+    return SweepRunner(scenarios, nas_space, acc_fn, cfg, **kw).run()

@@ -3,11 +3,7 @@ request (tests), pure-jnp reference otherwise. Model code calls these; it
 never touches pallas_call directly."""
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas

@@ -14,9 +14,7 @@ standard ring formulas.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Optional
 
 import numpy as np
 

@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.config import RunConfig, SHAPES, ShapeConfig, TrainConfig
-from repro.data.synthetic import LMStream, Prefetcher
+from repro.config import RunConfig, ShapeConfig, TrainConfig
+from repro.data.synthetic import LMStream
 from repro.models import api
 from repro.train.loop import LoopConfig, run_training
 from repro.train.optim import make_optimizer
@@ -46,7 +46,6 @@ def main():
                           learning_rate=1e-3),
     )
     pc = None
-    in_sh = out_sh = None
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
         from repro.launch.mesh import make_mesh

@@ -12,10 +12,8 @@ by the accelerator performance simulator (repro.core.simulator).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass, replace
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,6 @@ on the shared block are omitted; noted in DESIGN.md.)
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

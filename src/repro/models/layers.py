@@ -10,12 +10,10 @@ Shape conventions:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common import dtype_of
 from repro.config import ModelConfig

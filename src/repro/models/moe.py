@@ -18,7 +18,6 @@ with all experts local — tests assert the sharded and reference paths agree.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

@@ -6,7 +6,6 @@ applied to the scanned body.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

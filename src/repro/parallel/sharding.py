@@ -204,9 +204,7 @@ def cache_spec(
     bt = pc.batch_axes if len(pc.batch_axes) > 1 else pc.batch_axes[0]
     spec: list = [None] * len(shape)
 
-    # find the batch dim: first dim whose index follows the stacked lead dims
-    lead = 1 if parts[0] in ("k", "v", "k_scale", "v_scale") or len(shape) >= 4 else 0
-    core = shape[lead:] if lead else shape
+    # batch/head dims are indexed from the right so stacked lead dims pass through
     if name in ("k", "v", "k_scale", "v_scale"):
         # (..., B, KV, S, hd/1)
         b_i, kv_i, s_i, h_i = (len(shape) - 4, len(shape) - 3,

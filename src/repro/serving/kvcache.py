@@ -7,8 +7,6 @@ decode_32k / long_500k cells.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

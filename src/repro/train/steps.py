@@ -6,15 +6,12 @@ same functions the real launcher runs — there is no separate "dry-run model".
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.common import dtype_of
 from repro.config import ModelConfig, RunConfig, ShapeConfig
 from repro.models import api
 from repro.parallel import sharding

@@ -174,8 +174,6 @@ def test_joint_beats_fixed_hw_on_energy():
     scfg = search.SearchConfig(samples=96, batch=16, seed=0)
     joint = search.joint_search(ns, acc, rcfg, scfg)
     fixed = search.fixed_hw_search(ns, acc, rcfg, scfg)
-    jbest = [h for h in joint.history
-             if h["valid"] and h.get("meets_constraints")]
     assert joint.best_record is not None
     if fixed.best_record is not None:
         # joint should match or beat the fixed-hw reward

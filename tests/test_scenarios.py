@@ -1,0 +1,381 @@
+"""Scenario registry + energy-target reward variant + Pareto frontier + the
+multi-scenario sweep over one shared evaluation store."""
+import json
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core import nas, proxy, scenarios, search, simulator, sweep
+from repro.core import has as has_lib
+from repro.core.engine import EvaluationEngine, RecordStore
+from repro.core.pareto import ParetoFrontier, _canon, dominates
+from repro.core.reward import (
+    RewardConfig,
+    meets_constraints,
+    reward,
+    reward_record,
+)
+
+AREA_T = simulator.BASELINE_AREA_MM2
+
+
+# ---------------------------------------------------------------------------
+# reward: the energy-target variant (Sec. 3.4)
+# ---------------------------------------------------------------------------
+
+
+def test_energy_target_reward_hard_mode():
+    cfg = RewardConfig(latency_target_ms=10.0, area_target_mm2=50.0,
+                       energy_target_mj=1.0)
+    # energy and area both within target: hard mode reward == accuracy
+    assert reward(0.8, 5.0, 40.0, cfg, energy_mj=0.5) == pytest.approx(0.8)
+    # energy above target: acc * (e/t)^-1
+    assert reward(0.8, 5.0, 40.0, cfg, energy_mj=2.0) == \
+        pytest.approx(0.8 * (2.0 / 1.0) ** -1)
+    # area above target too: both penalties multiply
+    assert reward(0.8, 5.0, 100.0, cfg, energy_mj=2.0) == \
+        pytest.approx(0.8 * (2.0 ** -1) * (2.0 ** -1))
+    # the latency metric is ignored once an energy target is set
+    assert reward(0.8, 9999.0, 40.0, cfg, energy_mj=0.5) == \
+        reward(0.8, 0.001, 40.0, cfg, energy_mj=0.5)
+    # invalid sample
+    assert reward(0.8, None, None, cfg) == cfg.invalid_reward
+
+
+def test_energy_target_reward_soft_mode():
+    cfg = RewardConfig(latency_target_ms=10.0, area_target_mm2=50.0,
+                       energy_target_mj=1.0, mode="soft")
+    # soft mode penalizes on BOTH sides of the target (p=q=-0.07)
+    assert reward(0.8, 5.0, 40.0, cfg, energy_mj=0.5) == \
+        pytest.approx(0.8 * 0.5 ** -0.07 * (40.0 / 50.0) ** -0.07)
+    assert reward(0.8, 5.0, 40.0, cfg, energy_mj=2.0) == \
+        pytest.approx(0.8 * 2.0 ** -0.07 * (40.0 / 50.0) ** -0.07)
+
+
+def test_reward_record_matches_reward():
+    cfg = RewardConfig(latency_target_ms=0.5, area_target_mm2=AREA_T,
+                       energy_target_mj=0.7)
+    rec = {"valid": True, "accuracy": 0.77, "latency_ms": 0.4,
+           "energy_mj": 0.9, "area_mm2": 45.0}
+    assert reward_record(rec, cfg) == \
+        reward(0.77, 0.4, 45.0, cfg, energy_mj=0.9)
+    assert reward_record({"valid": False}, cfg) == cfg.invalid_reward
+
+
+def test_reward_record_missing_energy_is_unscorable():
+    """Predictor-backed records carry no energy: an energy-target objective
+    cannot certify them, so they score invalid_reward and fail constraints."""
+    cfg = RewardConfig(latency_target_ms=0.5, area_target_mm2=AREA_T,
+                       energy_target_mj=0.7)
+    rec = {"valid": True, "accuracy": 0.7, "latency_ms": 0.1,
+           "energy_mj": None, "area_mm2": 30.0, "predicted": True}
+    assert reward_record(rec, cfg) == cfg.invalid_reward
+    assert not meets_constraints(rec, cfg)
+
+
+def test_meets_constraints_modes():
+    cfg = RewardConfig(latency_target_ms=0.5, area_target_mm2=50.0,
+                       energy_target_mj=1.0)
+    ok = {"valid": True, "accuracy": 0.7, "latency_ms": 9.0,
+          "energy_mj": 0.9, "area_mm2": 40.0}
+    assert meets_constraints(ok, cfg)  # latency ignored under energy target
+    assert not meets_constraints({**ok, "energy_mj": 1.1}, cfg)
+    assert not meets_constraints({**ok, "area_mm2": 60.0}, cfg)
+    # area_only mode (phase-1 HAS) checks chip area alone
+    assert meets_constraints({**ok, "energy_mj": 1.1}, cfg, "area_only")
+    assert not meets_constraints({"valid": False}, cfg)
+    lat_cfg = RewardConfig(latency_target_ms=0.5, area_target_mm2=50.0)
+    assert not meets_constraints({**ok, "latency_ms": 0.6}, lat_cfg)
+    assert meets_constraints({**ok, "latency_ms": 0.4}, lat_cfg)
+
+
+# ---------------------------------------------------------------------------
+# scenarios: registry + presets
+# ---------------------------------------------------------------------------
+
+
+def test_presets_resolve_and_are_well_formed():
+    for preset, members in scenarios.PRESETS.items():
+        group = scenarios.expand(preset)
+        assert len(group) == len(members)
+        for sc in group:
+            rcfg = sc.reward_config()
+            assert rcfg.mode in ("hard", "soft")
+            assert rcfg.area_target_mm2 > 0
+    assert len(scenarios.expand("paper-use-cases")) >= 3
+
+
+def test_energy_scenario_reward_config():
+    sc = scenarios.get("energy-0.7mJ")
+    rcfg = sc.reward_config()
+    assert rcfg.energy_target_mj == 0.7
+    assert rcfg.latency_target_ms == float("inf")
+
+
+def test_expand_mixes_and_dedups():
+    inline = scenarios.Scenario(name="custom", latency_target_ms=0.42)
+    group = scenarios.expand(["fig8-latency", "lat-0.3ms", inline])
+    names = [s.name for s in group]
+    assert names.count("lat-0.3ms") == 1
+    assert "custom" in names
+
+
+def test_registry_errors():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenarios.get("no-such-scenario")
+    with pytest.raises(ValueError, match="already registered"):
+        scenarios.register(scenarios.get("lat-0.3ms"))
+    with pytest.raises(ValueError, match="latency or an energy"):
+        scenarios.Scenario(name="bad")
+    with pytest.raises(ValueError, match="mode"):
+        scenarios.Scenario(name="bad", latency_target_ms=1.0, mode="firm")
+
+
+def test_scenario_score_matches_engine_scoring():
+    nspace, hspace = nas.tiny_space(), has_lib.has_space()
+    sc = scenarios.get("energy-0.7mJ")
+    eng = EvaluationEngine(nspace, hspace, proxy.SurrogateAccuracy(),
+                           sc.reward_config(), cache=False)
+    rng = np.random.default_rng(0)
+    vecs = np.stack([
+        np.concatenate([nspace.sample(rng), hspace.sample(rng)])
+        for _ in range(32)
+    ])
+    for rec in eng.evaluate_batch(vecs):
+        assert sc.score(rec) == rec["reward"]
+        if rec["valid"]:
+            assert sc.feasible(rec) == rec["meets_constraints"]
+
+
+# ---------------------------------------------------------------------------
+# pareto frontier
+# ---------------------------------------------------------------------------
+
+
+def _rec(acc, lat, mj, mm2, valid=True):
+    return {"valid": valid, "accuracy": acc, "latency_ms": lat,
+            "energy_mj": mj, "area_mm2": mm2}
+
+
+def test_dominance_basics():
+    a = _rec(0.8, 0.2, 0.5, 30.0)
+    b = _rec(0.7, 0.3, 0.6, 40.0)
+    assert dominates(a, b) and not dominates(b, a)
+    assert not dominates(a, a)  # equal never dominates
+    c = _rec(0.9, 0.4, 0.5, 30.0)  # better acc, worse latency
+    assert not dominates(a, c) and not dominates(c, a)
+
+
+def test_frontier_incremental_semantics():
+    f = ParetoFrontier()
+    assert f.add(_rec(0.7, 0.3, 0.6, 40.0))
+    assert f.add(_rec(0.8, 0.4, 0.6, 40.0))  # trade-off joins
+    assert not f.add(_rec(0.6, 0.5, 0.7, 50.0))  # dominated, rejected
+    assert not f.add(_rec(0.7, 0.3, 0.6, 40.0))  # duplicate, rejected
+    assert f.add(_rec(0.9, 0.2, 0.5, 30.0))  # dominates both: evicts
+    assert len(f) == 1
+    assert not f.add(_rec(0.5, 0.1, 0.5, 30.0, valid=False))  # invalid
+    # records missing a metric are worst-case on that axis
+    assert f.add(_rec(0.95, 0.1, None, 20.0))
+    assert not f.add(_rec(0.95, 0.1, None, 25.0))
+
+
+def test_frontier_best_per_scenario():
+    f = ParetoFrontier()
+    fast = _rec(0.70, 0.1, 0.3, 50.0)
+    accurate = _rec(0.80, 1.0, 1.2, 50.0)
+    tiny = _rec(0.72, 0.5, 0.5, 15.0)
+    for r in (fast, accurate, tiny):
+        assert f.add(r)
+    pick = f.best(scenarios.get("lat-0.3ms"))
+    assert pick["latency_ms"] == 0.1
+    pick = f.best(scenarios.get("lat-1.3ms"))
+    assert pick["accuracy"] == 0.80
+    pick = f.best(scenarios.get("edge-sku-nano"))  # area <= 19.8
+    assert pick["area_mm2"] == 15.0
+    assert ParetoFrontier().best(scenarios.get("lat-0.3ms")) is None
+
+
+@given(st.lists(
+    st.tuples(
+        st.floats(min_value=0.0, max_value=1.0),
+        st.floats(min_value=0.01, max_value=10.0),
+        st.floats(min_value=0.01, max_value=10.0),
+        st.floats(min_value=1.0, max_value=100.0),
+    ),
+    max_size=60,
+))
+@settings(max_examples=60, deadline=None)
+def test_frontier_property_mutually_non_dominated(pts):
+    """The ISSUE's property test: after arbitrary insertions the frontier is
+    mutually non-dominated and covers every offered record."""
+    recs = [_rec(*p) for p in pts]
+    f = ParetoFrontier()
+    f.add_many(recs)
+    members = f.records()
+    for i, p in enumerate(members):
+        for q in members[i + 1:]:
+            assert not dominates(p, q)
+            assert not dominates(q, p)
+    for r in recs:  # coverage: equal-to or dominated by some member
+        cv = _canon(r, f.objectives)
+        assert any(
+            _canon(m, f.objectives) == cv or dominates(m, r) for m in members
+        )
+
+
+# ---------------------------------------------------------------------------
+# engine: objective rebinding + shared store
+# ---------------------------------------------------------------------------
+
+
+def _joint_vecs(nspace, hspace, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([np.concatenate([nspace.sample(rng), hspace.sample(rng)])
+                     for _ in range(n)])
+
+
+def test_set_objective_rescores_without_resimulation():
+    nspace, hspace = nas.tiny_space(), has_lib.has_space()
+    acc = proxy.SurrogateAccuracy()
+    sc_a = scenarios.get("lat-0.3ms")
+    sc_b = scenarios.get("energy-0.7mJ")
+    eng = EvaluationEngine(nspace, hspace, acc, sc_a.reward_config())
+    vecs = _joint_vecs(nspace, hspace, 48, seed=3)
+    eng.evaluate_batch(vecs)
+    evaluated = eng.stats.evaluated
+
+    eng.set_objective(sc_b.reward_config())
+    recs_b = eng.evaluate_batch(vecs)
+    assert eng.stats.evaluated == evaluated  # zero re-simulation
+
+    # identical to a fresh engine evaluating under B from scratch
+    fresh = EvaluationEngine(nspace, hspace, acc, sc_b.reward_config(),
+                             cache=False)
+    assert recs_b == fresh.evaluate_batch(vecs)
+
+
+def test_record_store_shares_across_engines_and_labels():
+    nspace, hspace = nas.tiny_space(), has_lib.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    store = RecordStore()
+    sc_a, sc_b = scenarios.get("lat-0.3ms"), scenarios.get("edge-sku-small")
+    eng_a = EvaluationEngine(nspace, hspace, acc, sc_a.reward_config(),
+                             store=store, label=sc_a.name)
+    eng_b = EvaluationEngine(nspace, hspace, acc, sc_b.reward_config(),
+                             store=store, label=sc_b.name)
+    vecs = _joint_vecs(nspace, hspace, 24, seed=5)
+    recs_a = eng_a.evaluate_batch(vecs)
+    assert store.stats.puts == 24
+    recs_b = eng_b.evaluate_batch(vecs)
+    assert eng_b.stats.evaluated == 0  # all served cross-scenario
+    assert store.stats.cross_hits == 24
+    # same raw metrics, different objective scoring
+    for ra, rb in zip(recs_a, recs_b):
+        if ra["valid"]:
+            assert ra["latency_ms"] == rb["latency_ms"]
+            assert ra["accuracy"] == rb["accuracy"]
+
+
+def test_record_store_namespaces_isolate_fixed_configs():
+    """nas-mode engines with different fixed accelerators must not serve each
+    other's records — latency depends on h."""
+    nspace = nas.tiny_space()
+    hspace = has_lib.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    store = RecordStore()
+    rcfg = RewardConfig(latency_target_ms=0.5, area_target_mm2=AREA_T)
+    h_small = hspace.decode(np.zeros(hspace.num_decisions, np.int32))
+    eng1 = EvaluationEngine(nspace, None, acc, rcfg, fixed_h=has_lib.BASELINE,
+                            store=store)
+    eng2 = EvaluationEngine(nspace, None, acc, rcfg, fixed_h=h_small,
+                            store=store)
+    rng = np.random.default_rng(7)
+    av = np.stack([nspace.sample(rng) for _ in range(8)])
+    eng1.evaluate_batch(av)
+    eng2.evaluate_batch(av)
+    assert eng2.stats.evaluated == 8  # no cross-namespace hits
+    assert len(store) == 16
+
+
+# ---------------------------------------------------------------------------
+# sweep runner
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_runner_end_to_end():
+    cfg = sweep.SweepConfig(
+        search=search.SearchConfig(samples=32, batch=8, seed=0))
+    result = sweep.SweepRunner(
+        ["lat-0.3ms", "energy-0.7mJ", "edge-sku-small"],
+        nas.tiny_space(), proxy.SurrogateAccuracy(), cfg).run()
+
+    assert len(result.outcomes) == 3
+    assert result.store_stats["cross_hits"] > 0
+    assert result.cross_scenario_hit_rate > 0
+    # frontier members are mutually non-dominated
+    members = result.frontier.records()
+    assert members
+    for i, p in enumerate(members):
+        for q in members[i + 1:]:
+            assert not dominates(p, q) and not dominates(q, p)
+    # the frontier-selected best is never worse than the run's own best
+    for o in result.outcomes:
+        assert o.best is not None
+        run_best = o.result.best_record
+        if run_best is not None and run_best["valid"]:
+            assert o.scenario.score(o.best) >= \
+                o.scenario.score(run_best) - 1e-12
+    # report surface
+    text = result.table()
+    for o in result.outcomes:
+        assert o.scenario.name in text
+    assert "cross-scenario" in text
+    d = result.as_dict()
+    json.dumps(d, default=str)  # JSON-ready
+    for row in d["outcomes"]:  # feasibility of the pick is always surfaced
+        assert isinstance(row["feasible"], bool)
+
+
+def test_sweep_runner_rejects_unknown_driver():
+    with pytest.raises(ValueError, match="unknown driver"):
+        sweep.SweepRunner(["lat-0.3ms"], nas.tiny_space(),
+                          proxy.SurrogateAccuracy(),
+                          sweep.SweepConfig(driver="bogus"))
+    with pytest.raises(ValueError, match="has_space"):
+        sweep.SweepRunner(["lat-0.3ms"], nas.tiny_space(),
+                          proxy.SurrogateAccuracy(),
+                          sweep.SweepConfig(driver="phase"),
+                          has_space=has_lib.has_space())
+
+
+def test_drivers_accept_scenario_and_tag_records():
+    sc = scenarios.get("lat-0.3ms")
+    res = search.joint_search(
+        nas.tiny_space(), proxy.SurrogateAccuracy(noise_pct=0.0),
+        cfg=search.SearchConfig(samples=16, batch=8, seed=0), scenario=sc)
+    assert len(res.history) == 16
+    for rec in res.history:
+        assert rec["scenario"] == sc.name
+        assert isinstance(rec["vec"], tuple)
+    # frontier-ready: records drop straight into a ParetoFrontier
+    assert len(res.frontier()) >= 1
+    with pytest.raises(ValueError, match="RewardConfig"):
+        search.joint_search(nas.tiny_space(),
+                            proxy.SurrogateAccuracy(noise_pct=0.0))
+
+
+def test_phase_records_carry_frozen_config_identity():
+    """Every history record names the frozen half of its (α, h) pair: phase-1
+    HAS records the architecture id, phase-2 NAS records the accelerator."""
+    res = search.phase_search(
+        nas.tiny_space(), proxy.SurrogateAccuracy(noise_pct=0.0),
+        scenarios.get("lat-0.3ms").reward_config(),
+        search.SearchConfig(samples=16, batch=8, seed=0))
+    phase1 = [h for h in res.history if h["space"] == "has"]
+    phase2 = [h for h in res.history if h["space"] != "has"]
+    assert phase1 and phase2
+    assert all(h["fixed_spec_id"] for h in phase1)
+    assert all(h["fixed_h"] for h in phase2)

@@ -4,9 +4,8 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import has, nas, proxy, search, simulator
+from repro.core import nas, proxy, search, simulator
 from repro.core.reward import RewardConfig
 from repro.models import api
 from repro.config import ModelConfig, RunConfig, ShapeConfig, TrainConfig

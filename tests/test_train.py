@@ -11,7 +11,7 @@ import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.config import ModelConfig, TrainConfig
-from repro.data.synthetic import LMStream, VisionStream
+from repro.data.synthetic import LMStream
 from repro.models import api
 from repro.parallel.compression import compressed_psum, dequantize_int8, quantize_int8
 from repro.train import checkpoint as ckpt
@@ -152,7 +152,6 @@ def test_straggler_watchdog(tmp_path):
         jax.block_until_ready(jax.tree.leaves(out[0])[0])
         return out
 
-    calls = [0]
     def batch_slow(i):
         if i in slow:
             time.sleep(0.5)
