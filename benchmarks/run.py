@@ -1,11 +1,17 @@
 """Benchmark harness: one module per paper table/figure (+ the roofline table,
-the engine micro-benchmark and the beyond-paper pod benchmarks). Prints
-``name,us_per_call,derived`` CSV.
+the engine micro-benchmark and the beyond-paper pod/runtime benchmarks).
+Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8] [--quick]
 
 ``--quick`` runs the CI smoke subset (engine micro-benchmark + roofline) at
 fast settings.
+
+Every benchmark also writes ``BENCH_<name>.json`` at the repo root with the
+shared schema ``{"name", "wall_s", "metrics"}`` (metrics = the scalar
+results plus the derived one-liner) — the perf-trajectory files CI archives
+run over run. The full per-benchmark payload still lands in
+``results/bench/<name>.json``.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ BENCHES = [
     ("table4_task2", "benchmarks.table4_task2"),
     ("hw_headroom", "benchmarks.hw_headroom"),
     ("sweep", "benchmarks.sweep_bench"),
+    ("runtime", "benchmarks.runtime_bench"),
     ("oneshot", "benchmarks.oneshot_bench"),
     ("meshsearch", "benchmarks.meshsearch_bench"),
     ("roofline", "benchmarks.roofline"),
@@ -65,12 +72,32 @@ def main() -> None:
                 json.dump({k: v for k, v in out.items()
                            if k not in ("supernet_params",)}, f, indent=1,
                           default=str)
+            # perf-trajectory file: shared schema, scalar metrics only
+            with open(f"BENCH_{name}.json", "w") as f:
+                json.dump({"name": name, "wall_s": dt,
+                           "metrics": _scalar_metrics(out)}, f, indent=1)
         except Exception as e:
             traceback.print_exc()
             print(f"{name},0,FAILED: {type(e).__name__}: {e}", flush=True)
             failures.append(name)
     if failures:
         sys.exit(1)
+
+
+def _scalar_metrics(out: dict) -> dict:
+    """The BENCH_<name>.json metrics payload: top-level scalars (plus
+    scalar-valued sub-dicts one level down), so the trajectory files stay
+    comparable run over run without dragging whole histories along."""
+    metrics = {}
+    for k, v in out.items():
+        if isinstance(v, (bool, int, float, str)) or v is None:
+            metrics[k] = v
+        elif isinstance(v, dict):
+            sub = {k2: v2 for k2, v2 in v.items()
+                   if isinstance(v2, (bool, int, float, str)) or v2 is None}
+            if sub:
+                metrics[k] = sub
+    return metrics
 
 
 if __name__ == "__main__":

@@ -1,0 +1,105 @@
+"""Durable search runtime: what persistence and concurrency buy.
+
+Three measurements over a small joint sweep (tiny space, calibrated
+surrogate accuracy + analytical simulator):
+
+1. **cold sweep** — N scenarios through one fresh ``DurableRecordStore``
+   (every evaluation paid and logged);
+2. **warm replay** — the identical sweep against a *reloaded* store in a new
+   store instance plus the completed checkpoints: zero re-simulation (the
+   acceptance criterion of the runtime subsystem) and the wall-clock ratio;
+3. **concurrent executor** — the same scenarios run on 4 threads
+   (``repro.runtime.SearchExecutor``) against one shared store, vs the
+   serial sweep: the batched numpy/jax evaluation path releases the GIL, so
+   searches overlap.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import nas, sweep
+from repro.core.search import SearchConfig
+from repro.runtime import (
+    Checkpointer,
+    DurableRecordStore,
+    SearchExecutor,
+    SearchRuntime,
+    scenario_jobs,
+)
+from benchmarks.common import surrogate
+
+SCENARIOS = ["lat-0.3ms", "lat-1.3ms", "energy-0.7mJ", "edge-sku-small"]
+
+
+def _sweep(space, scfg, runtime):
+    runner = sweep.SweepRunner(
+        SCENARIOS, space, surrogate(), sweep.SweepConfig(search=scfg))
+    return runner.run(runtime=runtime)
+
+
+def run(fast: bool = True) -> dict:
+    samples = 96 if fast else 384
+    space = nas.tiny_space()
+    scfg = SearchConfig(samples=samples, batch=16, seed=0)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        store_path = Path(tmp) / "records.jsonl"
+        ck_dir = Path(tmp) / "ck"
+
+        # 1. cold: fresh durable store, checkpoints written per batch
+        store = DurableRecordStore(store_path)
+        rt = SearchRuntime(store=store, checkpoint=Checkpointer(ck_dir))
+        t0 = time.monotonic()
+        cold = _sweep(space, scfg, rt)
+        cold_s = time.monotonic() - t0
+        cold_evals = store.stats.puts
+        store.close()
+
+        # 2. warm: new process equivalent — reload store + checkpoints
+        store2 = DurableRecordStore(store_path)
+        rt2 = SearchRuntime(store=store2, checkpoint=Checkpointer(ck_dir))
+        t0 = time.monotonic()
+        warm = _sweep(space, scfg, rt2)
+        warm_s = time.monotonic() - t0
+        warm_evals = store2.stats.puts
+        identical = all(
+            a.result.history == b.result.history
+            for a, b in zip(cold.outcomes, warm.outcomes)
+        )
+        store2.close()
+
+        # 3. concurrency: executor (4 threads, fresh store) vs serial (cold)
+        store3 = DurableRecordStore(Path(tmp) / "conc.jsonl")
+        ex = SearchExecutor(store=store3, max_workers=4)
+        t0 = time.monotonic()
+        report = ex.run(scenario_jobs(SCENARIOS, space, surrogate(), scfg))
+        conc_s = time.monotonic() - t0
+        store3.close()
+        conc_ok = not report.errors and not report.interrupted
+
+    replay_x = cold_s / max(warm_s, 1e-9)
+    conc_x = cold_s / max(conc_s, 1e-9)
+    return {
+        "scenarios": len(SCENARIOS),
+        "samples_per_scenario": samples,
+        "cold_s": cold_s,
+        "cold_evals": cold_evals,
+        "warm_s": warm_s,
+        "warm_evals": warm_evals,
+        "warm_identical": identical,
+        "concurrent_s": conc_s,
+        "concurrent_ok": conc_ok,
+        "n_evals": cold_evals,
+        "derived": (
+            f"warm replay: {warm_evals} re-evals (identical={identical}), "
+            f"{replay_x:.1f}x faster than cold {cold_s:.1f}s; "
+            f"4-thread executor {conc_x:.2f}x vs serial"
+        ),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    print(out["derived"])

@@ -1,0 +1,182 @@
+"""Serve "best config for scenario X" off a persisted record store.
+
+Loads a ``repro.runtime.DurableRecordStore`` JSONL log (as written by
+``scripts/sweep.py --store``), folds every valid raw record into one Pareto
+frontier over (accuracy, latency, energy, area), and answers per-scenario
+best-config queries with **zero** search or simulation — including for
+scenarios that were never searched: the frontier contains an optimal record
+for any monotone objective (see ``repro.core.pareto``).
+
+  PYTHONPATH=src python scripts/runtime_serve.py --store /tmp/s.jsonl --all
+  PYTHONPATH=src python scripts/runtime_serve.py --store /tmp/s.jsonl \\
+      --scenario lat-0.3ms --scenario edge-sku-nano
+  PYTHONPATH=src python scripts/runtime_serve.py --store /tmp/s.jsonl \\
+      --query lat=0.45,area=40,mode=soft
+  PYTHONPATH=src python scripts/runtime_serve.py --store /tmp/s.jsonl --serve
+
+``--serve`` reads queries from stdin (one scenario name or ``key=value``
+query per line) and answers each — a process holding the frontier in memory
+answers in microseconds, which is the point: the expensive part was paid by
+whatever populated the store.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.core import scenarios as scenarios_lib
+from repro.core.engine import split_key
+from repro.core.pareto import ParetoFrontier
+from repro.runtime import DurableRecordStore
+
+
+def load_frontier(store_path: str) -> tuple[ParetoFrontier, dict]:
+    """Store log -> one frontier over every valid record. Each record is
+    annotated with its decision vector and namespace digest prefix (the
+    config identity; one namespace per engine configuration — a joint sweep
+    over one space writes exactly one)."""
+    store = DurableRecordStore(store_path)
+    store.close()  # read-only use: no appends
+    frontier = ParetoFrontier()
+    namespaces = set()
+    total = 0
+    for key, raw, writer in store.entries():
+        total += 1
+        ns, vec = split_key(key)
+        namespaces.add(ns.hex()[:12])
+        rec = dict(raw)
+        rec["vec"] = vec
+        rec["ns"] = ns.hex()[:12]
+        if writer is not None:
+            rec["paid_by"] = writer
+        frontier.add(rec)
+    info = {
+        "records": total,
+        "frontier": len(frontier),
+        "namespaces": sorted(namespaces),
+        "dropped_lines": store.loaded_dropped,
+    }
+    return frontier, info
+
+
+def parse_query(text: str) -> scenarios_lib.Scenario:
+    """A scenario name, or an ad-hoc ``lat=0.5,energy=0.7,area=40,mode=soft``
+    query built into an unregistered Scenario on the fly."""
+    text = text.strip()
+    if "=" not in text:
+        return scenarios_lib.get(text)
+    kw: dict = {"name": f"query({text})"}
+    keys = {
+        "lat": "latency_target_ms",
+        "latency": "latency_target_ms",
+        "energy": "energy_target_mj",
+        "area": "area_target_mm2",
+        "mode": "mode",
+    }
+    for part in text.split(","):
+        k, _, v = part.partition("=")
+        k = k.strip()
+        if k not in keys:
+            raise ValueError(f"unknown query key {k!r} (one of {sorted(keys)})")
+        field = keys[k]
+        kw[field] = v.strip() if field == "mode" else float(v)
+    return scenarios_lib.Scenario(**kw)
+
+
+def answer(frontier: ParetoFrontier, sc: scenarios_lib.Scenario) -> dict:
+    best = frontier.best(sc)
+    out = {
+        "scenario": sc.name,
+        "targets": sc.describe(),
+        "best": best,
+        "feasible": best is not None and sc.feasible(best),
+    }
+    return out
+
+
+def show(out: dict, as_json: bool) -> None:
+    if as_json:
+        print(json.dumps(out, default=str))
+        return
+    b = out["best"]
+    if b is None:
+        print(f"{out['scenario']:<22} {out['targets']:<34} (no valid record)")
+        return
+    energy = b.get("energy_mj")
+    e_str = "   None" if energy is None else f"{energy:>7.4f}"
+    print(
+        f"{out['scenario']:<22} {out['targets']:<34} "
+        f"acc={b['accuracy'] * 100:.2f}% lat={b['latency_ms']:.4f}ms "
+        f"mJ={e_str.strip()} mm2={b['area_mm2']:.1f} "
+        f"feasible={out['feasible']} paid_by={b.get('paid_by')} "
+        f"vec={b.get('vec')}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="best co-design configs off a persisted record store"
+    )
+    ap.add_argument(
+        "--store", required=True, metavar="PATH", help="DurableRecordStore JSONL log"
+    )
+    ap.add_argument(
+        "--scenario",
+        action="append",
+        default=[],
+        help="registered scenario name (repeatable)",
+    )
+    ap.add_argument(
+        "--query",
+        action="append",
+        default=[],
+        help="ad-hoc query, e.g. lat=0.5,area=40,mode=soft",
+    )
+    ap.add_argument(
+        "--all", action="store_true", help="answer every registered scenario"
+    )
+    ap.add_argument(
+        "--serve", action="store_true", help="read queries from stdin, one per line"
+    )
+    ap.add_argument("--json", action="store_true", help="one JSON object per answer")
+    args = ap.parse_args()
+
+    frontier, info = load_frontier(args.store)
+    print(
+        f"# {args.store}: {info['records']} records, "
+        f"frontier {info['frontier']}, "
+        f"{len(info['namespaces'])} namespace(s)",
+        file=sys.stderr,
+    )
+
+    queries = [parse_query(s) for s in args.scenario]
+    queries += [parse_query(q) for q in args.query]
+    if args.all:
+        queries += [scenarios_lib.get(n) for n in scenarios_lib.names()]
+    for sc in queries:
+        show(answer(frontier, sc), args.json)
+
+    if args.serve:
+        print(
+            "# serving; one scenario name or key=value query per line",
+            file=sys.stderr,
+        )
+        for line in sys.stdin:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            try:
+                show(answer(frontier, parse_query(line)), args.json)
+            except (KeyError, ValueError) as e:
+                print(f"error: {e}", file=sys.stderr)
+            sys.stdout.flush()
+    elif not queries:
+        ap.error("nothing to answer: pass --scenario/--query/--all/--serve")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,9 +5,20 @@ named scenario presets (``repro.core.scenarios``) and prints the per-scenario
 best-config table plus the shared-store cache counters, including the
 cross-scenario hit rate.
 
+Durable mode (``repro.runtime``): ``--store PATH`` persists every evaluation
+to an append-only JSONL log and checkpoints each search per batch (under
+``--checkpoint-dir``, default ``PATH.ck``) — kill the process at any point
+and re-run with ``--resume`` to continue exactly where it stopped; a second
+full run against the same store re-simulates nothing. ``--workers N`` runs
+the scenarios concurrently (``repro.runtime.SearchExecutor``), and
+``--budget-samples`` / ``--deadline-s`` bound the run, checkpointing
+everything in flight when the budget expires (exit code 3: resumable).
+
   PYTHONPATH=src python scripts/sweep.py --preset paper-use-cases --quick
   PYTHONPATH=src python scripts/sweep.py --preset fig8-latency --space s1_mbv2
   PYTHONPATH=src python scripts/sweep.py --scenarios lat-0.3ms,edge-sku-nano
+  PYTHONPATH=src python scripts/sweep.py --quick --store /tmp/s.jsonl
+  PYTHONPATH=src python scripts/sweep.py --quick --store /tmp/s.jsonl --resume
   PYTHONPATH=src python scripts/sweep.py --list
 """
 from __future__ import annotations
@@ -15,12 +26,15 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 from repro.core import nas, proxy, scenarios, sweep
-from repro.core.search import SearchConfig
+from repro.core.search import SearchConfig, SearchInterrupted
+
+EXIT_INTERRUPTED = 3  # budget/deadline expired; re-run with --resume
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -46,12 +60,99 @@ def build_parser() -> argparse.ArgumentParser:
         help="ablation: per-scenario private caches instead of the shared store",
     )
     ap.add_argument(
+        "--store",
+        default=None,
+        metavar="PATH",
+        help="durable record store (append-only JSONL, reused across runs)",
+    )
+    ap.add_argument(
+        "--checkpoint-dir",
+        default=None,
+        metavar="DIR",
+        help="search checkpoints (default: <store>.ck when --store is given)",
+    )
+    ap.add_argument(
+        "--resume",
+        action="store_true",
+        help="resume from existing checkpoints (default: start fresh, "
+        "clearing them — store evaluations are reused either way)",
+    )
+    ap.add_argument(
+        "--workers",
+        type=int,
+        default=0,
+        metavar="N",
+        help="run scenarios concurrently on N threads (0 = serial)",
+    )
+    ap.add_argument(
+        "--budget-samples",
+        type=int,
+        default=None,
+        help="stop (checkpointing everything) after this many samples total",
+    )
+    ap.add_argument(
+        "--deadline-s",
+        type=float,
+        default=None,
+        help="stop (checkpointing everything) after this much wall clock",
+    )
+    ap.add_argument(
+        "--checkpoint-every",
+        type=int,
+        default=1,
+        metavar="B",
+        help="batches between checkpoint saves (1 = maximal durability; "
+        "each save rewrites the search's full state, so raise this for "
+        "long searches)",
+    )
+    ap.add_argument(
+        "--compact",
+        action="store_true",
+        help="compact the durable store log before exiting",
+    )
+    ap.add_argument(
         "--json", default=None, metavar="PATH", help="also write the result as JSON"
     )
     ap.add_argument(
         "--list", action="store_true", help="list scenarios and presets, then exit"
     )
     return ap
+
+
+def build_runtime(args):
+    """--store/--checkpoint-dir/--resume/budget flags -> SearchRuntime."""
+    if args.store is None and args.checkpoint_dir is None:
+        if args.budget_samples is None and args.deadline_s is None:
+            return None
+    from repro.runtime import Budget, Checkpointer, DurableRecordStore, SearchRuntime
+
+    store = None
+    if args.store is not None:
+        if args.no_share:
+            raise SystemExit("--store and --no-share are contradictory")
+        store = DurableRecordStore(args.store)
+    ck_dir = args.checkpoint_dir
+    if ck_dir is None and args.store is not None:
+        ck_dir = args.store + ".ck"
+    checkpoint = None
+    if ck_dir is not None:
+        checkpoint = Checkpointer(ck_dir)
+        if not args.resume:
+            cleared = checkpoint.clear()
+            if cleared:
+                print(
+                    f"cleared {cleared} stale checkpoint(s) in {ck_dir} "
+                    f"(pass --resume to continue them)"
+                )
+    budget = None
+    if args.budget_samples is not None or args.deadline_s is not None:
+        budget = Budget(max_samples=args.budget_samples, deadline_s=args.deadline_s)
+    return SearchRuntime(
+        store=store,
+        checkpoint=checkpoint,
+        budget=budget,
+        checkpoint_every=args.checkpoint_every,
+    )
 
 
 def main() -> None:
@@ -77,6 +178,7 @@ def main() -> None:
     space_name = "tiny" if args.quick else args.space
     samples = min(args.samples, 96) if args.quick else args.samples
     space = nas.SPACES[space_name]()
+    runtime = build_runtime(args)
     cfg = sweep.SweepConfig(
         driver=args.driver,
         search=SearchConfig(
@@ -88,20 +190,105 @@ def main() -> None:
         share_cache=not args.no_share,
     )
     runner = sweep.SweepRunner(selected, space, proxy.SurrogateAccuracy(), cfg)
+    extras = f", store={args.store}" if args.store else ""
+    if args.workers:
+        extras += f", workers={args.workers}"
     print(
         f"sweep: {len(runner.scenarios)} scenarios × {samples} samples, "
         f"driver={args.driver}, space={space_name}, "
-        f"shared cache={'on' if cfg.share_cache else 'off'}"
+        f"shared cache={'on' if cfg.share_cache else 'off'}{extras}"
     )
-    result = runner.run(verbose=True)
-    print()
-    print(result.table())
-    print(f"wall: {result.wall_s:.1f}s")
 
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(result.as_dict(), f, indent=1, default=str)
-        print(f"wrote {args.json}")
+    interrupted = False
+    try:
+        if args.workers > 0:
+            result = run_concurrent(args, runner, runtime, cfg)
+            interrupted = result is None
+        else:
+            result = runner.run(verbose=True, runtime=runtime)
+    except SearchInterrupted as e:
+        print(f"\n{e}")
+        interrupted = True
+        result = None
+
+    if result is not None:
+        print()
+        print(result.table())
+        print(f"wall: {result.wall_s:.1f}s")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(result.as_dict(), f, indent=1, default=str)
+            print(f"wrote {args.json}")
+
+    if runtime is not None and runtime.store is not None:
+        from repro.runtime import DurableRecordStore
+
+        store = runtime.store
+        if isinstance(store, DurableRecordStore):
+            if args.compact:
+                dropped = store.compact()
+                print(f"compacted {args.store}: dropped {dropped} stale lines")
+            store.close()
+            print(
+                f"store: {len(store)} records in {args.store} "
+                f"(loaded {store.loaded}, appended {store.appended})"
+            )
+
+    if interrupted:
+        if runtime is not None and runtime.checkpoint is not None:
+            print(
+                "budget exhausted — all in-flight searches checkpointed; "
+                "re-run with --resume to continue"
+            )
+        else:
+            print(
+                "budget exhausted — nothing was checkpointed (pass --store "
+                "or --checkpoint-dir to make interrupted runs resumable)"
+            )
+        raise SystemExit(EXIT_INTERRUPTED)
+
+
+def run_concurrent(args, runner, runtime, cfg):
+    """--workers N: the same sweep through repro.runtime.SearchExecutor.
+    Returns None when any search was interrupted (budget/deadline)."""
+    from repro.core.engine import RecordStore
+    from repro.runtime import SearchExecutor, scenario_jobs
+
+    store = runtime.store if runtime else None
+    if store is None and cfg.share_cache:
+        # match the serial path: one shared memo even without --store
+        store = RecordStore()
+    ex = SearchExecutor(
+        store=store,
+        checkpoint=runtime.checkpoint if runtime else None,
+        max_workers=args.workers,
+        budget=runtime.budget if runtime else None,
+        checkpoint_every=args.checkpoint_every,
+    )
+    t0 = time.monotonic()
+    jobs = scenario_jobs(
+        runner.scenarios,
+        runner.nas_space,
+        runner.acc_fn,
+        cfg.search,
+        driver=cfg.driver,
+    )
+    report = ex.run(jobs)
+    for name, err in report.errors.items():
+        raise RuntimeError(f"search {name} failed") from err
+    if report.interrupted:
+        for name in report.interrupted:
+            print(f"interrupted: {name}")
+        return None
+    results = [
+        (sc, report.outcomes[f"sweep.{sc.name}"].result) for sc in runner.scenarios
+    ]
+    return sweep.assemble_result(
+        results,
+        objectives=cfg.objectives,
+        store_stats=report.store_stats,
+        wall_s=time.monotonic() - t0,
+    )
 
 
 if __name__ == "__main__":

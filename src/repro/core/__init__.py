@@ -7,5 +7,7 @@ signals, reward the Eq. 4-6 objective, and search/meshsearch the drivers.
 scenarios/pareto/sweep layer the multi-use-case machinery on top: named
 deployment scenarios, the incremental Pareto frontier, and the sweep that
 fans N scenarios over one shared evaluation memo.
+repro.runtime makes it all durable: a persistent record store,
+checkpoint/resume for every driver, and a concurrent multi-search executor.
 See docs/architecture.md for how the pieces fit together.
 """

@@ -11,6 +11,12 @@
   the ablation).
 
 All controllers speak integer decision vectors (see core.space.Space).
+
+Every controller is checkpointable: ``state()`` returns a plain
+numpy/python snapshot (policy params, optimizer moments, RNG state,
+baselines) and ``load_state(state)`` restores it such that the remaining
+sample/update trajectory is bitwise identical to an uninterrupted run —
+the contract ``repro.runtime.checkpoint`` builds resume on.
 """
 from __future__ import annotations
 
@@ -56,6 +62,15 @@ class _Adam:
         self.m = jax.tree.map(jnp.zeros_like, params)
         self.v = jax.tree.map(jnp.zeros_like, params)
         self.t = 0
+
+    def state(self) -> dict:
+        return {"m": [np.asarray(x) for x in self.m],
+                "v": [np.asarray(x) for x in self.v], "t": self.t}
+
+    def load_state(self, state: dict) -> None:
+        self.m = [jnp.asarray(x) for x in state["m"]]
+        self.v = [jnp.asarray(x) for x in state["v"]]
+        self.t = state["t"]
 
     def step(self, params, grads, clip: Optional[float] = None):
         if clip is not None:
@@ -139,6 +154,19 @@ class PPOController:
     def best(self) -> np.ndarray:
         return np.array([int(jnp.argmax(lg)) for lg in self.logits], np.int32)
 
+    def state(self) -> dict:
+        return {"logits": [np.asarray(lg) for lg in self.logits],
+                "adam": self.opt.state(),
+                "rng": self.rng.bit_generator.state,
+                "baseline": self.baseline, "b_init": self._b_init}
+
+    def load_state(self, state: dict) -> None:
+        self.logits = [jnp.asarray(lg) for lg in state["logits"]]
+        self.opt.load_state(state["adam"])
+        self.rng.bit_generator.state = state["rng"]
+        self.baseline = state["baseline"]
+        self._b_init = state["b_init"]
+
 
 @dataclasses.dataclass
 class ReinforceConfig:
@@ -190,6 +218,18 @@ class ReinforceController:
     def best(self) -> np.ndarray:
         return np.array([int(jnp.argmax(lg)) for lg in self.logits], np.int32)
 
+    def state(self) -> dict:
+        return {"logits": [np.asarray(lg) for lg in self.logits],
+                "adam": self.opt.state(),
+                "rng": self.rng.bit_generator.state,
+                "baseline": self.baseline}
+
+    def load_state(self, state: dict) -> None:
+        self.logits = [jnp.asarray(lg) for lg in state["logits"]]
+        self.opt.load_state(state["adam"])
+        self.rng.bit_generator.state = state["rng"]
+        self.baseline = state["baseline"]
+
 
 @dataclasses.dataclass
 class EvolutionConfig:
@@ -230,6 +270,15 @@ class EvolutionController:
 
     def best(self) -> np.ndarray:
         return max(self.population, key=lambda t: t[1])[0]
+
+    def state(self) -> dict:
+        return {"rng": self.rng.bit_generator.state,
+                "population": [(np.asarray(v), r) for v, r in self.population]}
+
+    def load_state(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
+        self.population = [(np.asarray(v), float(r))
+                           for v, r in state["population"]]
 
 
 CONTROLLERS = {

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -82,6 +83,44 @@ def _key(vec: np.ndarray) -> bytes:
     return np.ascontiguousarray(vec, dtype=np.int64).tobytes()
 
 
+# Store keys are ``sha1(namespace) ++ vec.tobytes()``: a fixed-length digest
+# prefix followed by the encoded int64 decision vector. The runtime store
+# persists keys verbatim; ``split_key`` recovers the two halves (the vec is
+# what ``scripts/runtime_serve.py`` prints as the config identity).
+NAMESPACE_BYTES = 20  # sha1 digest length
+
+
+def split_key(key: bytes) -> tuple[bytes, tuple[int, ...]]:
+    """Inverse of ``EvaluationEngine._vec_key``: (namespace digest, vec)."""
+    ns, raw = key[:NAMESPACE_BYTES], key[NAMESPACE_BYTES:]
+    return ns, tuple(int(x) for x in np.frombuffer(raw, dtype=np.int64))
+
+
+def _identity_token(obj) -> object:
+    """Stable identity of a namespace-relevant object (accuracy signal,
+    predictor). Content-based when possible — an object may publish a
+    ``cache_key`` attribute/method, and plain-scalar-field dataclasses
+    (``SurrogateAccuracy``, ``TrainedAccuracy``) use their repr — so the
+    namespace survives process restarts, which is what lets a
+    ``repro.runtime.DurableRecordStore`` rehydrate at full hit rate.
+    Falls back to ``id()`` for stateful objects (e.g. a trained CostModel):
+    those namespaces are process-local, guarded against address reuse by
+    ``RecordStore.pin``."""
+    if obj is None:
+        return None
+    key = getattr(obj, "cache_key", None)
+    if callable(key):
+        key = key()
+    if key is not None:
+        return (type(obj).__name__, str(key))
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        vals = list(vars(obj).values())
+        if all(isinstance(v, (bool, int, float, str, tuple, frozenset,
+                              type(None))) for v in vals):
+            return (type(obj).__name__, repr(obj))
+    return (type(obj).__name__, id(obj))
+
+
 @dataclasses.dataclass
 class StoreStats:
     """Counters for one RecordStore (all monotone)."""
@@ -90,6 +129,7 @@ class StoreStats:
     hits: int = 0
     cross_hits: int = 0  # hits whose writer label differs from the reader
     puts: int = 0
+    evictions: int = 0   # FIFO evictions at the max_entries cap
 
     @property
     def hit_rate(self) -> float:
@@ -115,6 +155,12 @@ class RecordStore:
     for — the headline number of the scenario sweep. Raw records carry no
     reward: every reader re-scores them under its own objective, which is why
     sharing across objectives is sound.
+
+    At the ``max_entries`` cap the oldest entry is evicted FIFO (dict
+    insertion order) and counted in ``stats.evictions``. ``get``/``put`` are
+    lock-protected, so N concurrent searches (``repro.runtime.executor``) can
+    share one store; ``repro.runtime.DurableRecordStore`` adds an append-only
+    on-disk log with the same interface.
     """
 
     def __init__(self, max_entries: int = 1_000_000):
@@ -122,6 +168,7 @@ class RecordStore:
         self._data: dict[bytes, tuple[dict, Optional[str]]] = {}
         self.stats = StoreStats()
         self._pins: list = []
+        self._lock = threading.RLock()
 
     def pin(self, *objs) -> None:
         """Keep strong references to the objects whose identity an engine's
@@ -131,21 +178,34 @@ class RecordStore:
         self._pins.extend(o for o in objs if o is not None)
 
     def get(self, key: bytes, reader: Optional[str] = None) -> Optional[dict]:
-        self.stats.gets += 1
-        ent = self._data.get(key)
-        if ent is None:
-            return None
-        raw, writer = ent
-        self.stats.hits += 1
-        if writer is not None and writer != reader:
-            self.stats.cross_hits += 1
-        return raw
+        with self._lock:
+            self.stats.gets += 1
+            ent = self._data.get(key)
+            if ent is None:
+                return None
+            raw, writer = ent
+            self.stats.hits += 1
+            if writer is not None and writer != reader:
+                self.stats.cross_hits += 1
+            return raw
 
     def put(self, key: bytes, raw: dict, writer: Optional[str] = None) -> None:
-        if len(self._data) >= self.max_entries:
-            self._data.clear()
-        self._data[key] = (dict(raw), writer)
-        self.stats.puts += 1
+        with self._lock:
+            self._insert(key, dict(raw), writer)
+            self.stats.puts += 1
+
+    def _insert(self, key: bytes, raw: dict, writer: Optional[str]) -> None:
+        """Uncounted insert with FIFO eviction at the cap (lock held)."""
+        if key not in self._data:
+            while len(self._data) >= self.max_entries:
+                self._data.pop(next(iter(self._data)))
+                self.stats.evictions += 1
+        self._data[key] = (raw, writer)
+
+    def entries(self):
+        """Snapshot of (key, raw record, writer label) triples."""
+        with self._lock:
+            return [(k, dict(raw), w) for k, (raw, w) in self._data.items()]
 
     def __len__(self) -> int:
         return len(self._data)
@@ -239,7 +299,10 @@ class EvaluationEngine:
         encoded vector (mode, fixed config, inference batch, backend, accuracy
         signal) must not collide. Objective (rcfg/constraint_mode) is
         deliberately absent — raw records are objective-independent, and
-        cross-objective reuse is the point of sharing a store."""
+        cross-objective reuse is the point of sharing a store. Identity of
+        the accuracy signal / predictor is content-based where possible
+        (``_identity_token``) so the namespace — and therefore a durable
+        store's hit rate — survives process restarts."""
         acc = self.acc_fn
         if isinstance(acc, CachedAccuracy):
             acc = acc.fn
@@ -249,8 +312,8 @@ class EvaluationEngine:
             self.fixed_h,
             repr(self.fixed_spec),
             self.fixed_acc,
-            None if acc is None else (type(acc).__name__, id(acc)),
-            None if self.predictor is None else id(self.predictor),
+            _identity_token(acc),
+            _identity_token(self.predictor),
         ))
         return hashlib.sha1(ident.encode()).digest()
 

@@ -95,6 +95,25 @@ class ParetoFrontier:
         """Frontier members, best-accuracy-first, as fresh dicts."""
         return [dict(r) for _, r in sorted(self._points, key=lambda t: t[0])]
 
+    def state(self) -> dict:
+        """Serializable snapshot (see ``repro.runtime.checkpoint``)."""
+        return {
+            "objectives": [list(o) for o in self.objectives],
+            "records": self.records(),
+            "offered": self.offered,
+            "admitted": self.admitted,
+        }
+
+    @classmethod
+    def from_state(cls, state: Mapping) -> "ParetoFrontier":
+        """Inverse of ``state``: members are reinstated verbatim (they are
+        mutually non-dominated by construction, so no re-filtering)."""
+        f = cls(tuple((k, s) for k, s in state["objectives"]))
+        f._points = [(_canon(r, f.objectives), dict(r)) for r in state["records"]]
+        f.offered = int(state["offered"])
+        f.admitted = int(state["admitted"])
+        return f
+
     def feasible(self, scenario) -> list[dict]:
         """Frontier members meeting ``scenario``'s hard constraints."""
         return [r for r in self.records() if scenario.feasible(r)]

@@ -32,6 +32,18 @@ named ``Scenario`` (``scenario=``, see ``repro.core.scenarios``); passing
 ``SearchConfig(store=RecordStore())`` shares one raw-metric memo across every
 engine the driver builds — and across drivers/scenarios, which is how the
 scenario sweep (``repro.core.sweep``) amortizes evaluation.
+
+Durability: every driver also accepts ``runtime=`` (any object with the
+``repro.runtime.SearchRuntime`` surface: ``store``, ``checkpoint``,
+``admit(n)``, ``checkpoint_every``) or the ``checkpoint_dir=`` shorthand.
+With a checkpointer attached, ``_drive`` persists controller state, history
+and progress at every batch boundary; re-running the same driver call with
+the same ``tag`` resumes mid-search and reproduces the *bitwise-identical*
+remaining trajectory (controllers snapshot their RNG + optimizer state — see
+``controllers``). A completed search's checkpoint doubles as a result cache:
+re-running it replays the finished ``SearchResult`` without evaluating
+anything. When the runtime's budget/stop-token denies the next batch,
+drivers checkpoint and raise ``SearchInterrupted``.
 """
 from __future__ import annotations
 
@@ -67,6 +79,21 @@ class SearchConfig:
     # share one raw-metric memo across every engine this config builds (and
     # across runs reusing the same store) — see engine.RecordStore
     store: Optional[RecordStore] = None
+
+
+class SearchInterrupted(RuntimeError):
+    """A search stopped at a batch boundary before exhausting its sample
+    budget (runtime budget spent, deadline passed, or graceful stop). When a
+    checkpointer is attached the in-flight state was saved under ``tag``
+    first, so re-running the same driver call resumes exactly."""
+
+    def __init__(self, tag: str, samples_done: int, samples: int):
+        super().__init__(
+            f"search {tag!r} interrupted at {samples_done}/{samples} samples"
+        )
+        self.tag = tag
+        self.samples_done = samples_done
+        self.samples = samples
 
 
 @dataclasses.dataclass
@@ -107,8 +134,27 @@ def _objective(rcfg: Optional[RewardConfig],
     return scenario.reward_config()
 
 
+def _as_runtime(runtime, checkpoint_dir):
+    """Resolve the ``runtime=``/``checkpoint_dir=`` driver arguments (an
+    explicit runtime wins; the shorthand builds a checkpoint-only one)."""
+    if runtime is not None or checkpoint_dir is None:
+        return runtime
+    from repro.runtime import SearchRuntime  # deferred: core stays standalone
+
+    return SearchRuntime.at(checkpoint_dir)
+
+
+def _runtime_store(cfg: SearchConfig, runtime) -> Optional[RecordStore]:
+    """The store engines should memoize into: an explicit ``cfg.store`` wins
+    over the runtime's shared (possibly durable) store."""
+    if cfg.store is not None or runtime is None:
+        return cfg.store
+    return getattr(runtime, "store", None)
+
+
 def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
-           warm_has=None, scenario: Optional[Scenario] = None) -> SearchResult:
+           warm_has=None, scenario: Optional[Scenario] = None,
+           runtime=None, tag: str = "search") -> SearchResult:
     ctrl = CONTROLLERS[cfg.controller](space, seed=cfg.seed)
     if warm_has is not None and hasattr(ctrl, "logits"):
         offset, base_vec, logit = warm_has
@@ -118,10 +164,54 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
     history = []
     best = None
     best_vec = None
-    t0 = time.monotonic()
     n = 0
+    wall_base = 0.0
+    ck = getattr(runtime, "checkpoint", None) if runtime is not None else None
+    every = max(int(getattr(runtime, "checkpoint_every", 1) or 1), 1)
+    if ck is not None:
+        state = ck.load(tag)
+        if state is not None:
+            meta = state["meta"]
+            want = {"space": space.name, "controller": cfg.controller,
+                    "seed": cfg.seed, "samples": cfg.samples,
+                    "batch": cfg.batch,
+                    "scenario": None if scenario is None else scenario.name}
+            got = {k: meta.get(k) for k in want}
+            if got != want:
+                raise ValueError(
+                    f"checkpoint {tag!r} was written by a different search "
+                    f"({got} != {want}); refusing to resume"
+                )
+            ctrl.load_state(state["controller"])
+            history = list(state["history"])
+            n = state["samples_done"]
+            best = state["best_record"]
+            best_vec = (None if state["best_vec"] is None
+                        else np.asarray(state["best_vec"]))
+            wall_base = state.get("wall_s", 0.0)
+    t0 = time.monotonic()
+
+    def save():
+        ck.save(tag, {
+            "meta": {"space": space.name, "controller": cfg.controller,
+                     "seed": cfg.seed, "samples": cfg.samples,
+                     "batch": cfg.batch,
+                     "scenario": None if scenario is None else scenario.name},
+            "controller": ctrl.state(),
+            "samples_done": n,
+            "history": history,
+            "best_record": best,
+            "best_vec": None if best_vec is None else np.asarray(best_vec),
+            "wall_s": wall_base + time.monotonic() - t0,
+        })
+
+    batches = 0
     while n < cfg.samples:
         batch = min(cfg.batch, cfg.samples - n)
+        if runtime is not None and not runtime.admit(batch):
+            if ck is not None:
+                save()
+            raise SearchInterrupted(tag, n, cfg.samples)
         vecs = ctrl.sample(batch)
         recs = engine.evaluate_batch(vecs)
         rewards = []
@@ -149,6 +239,11 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
                 best, best_vec = rec, np.asarray(v)
             n += 1
         ctrl.update(vecs, np.array(rewards))
+        batches += 1
+        if ck is not None and batches % every == 0:
+            save()
+    if ck is not None:
+        save()  # final state: doubles as the completed-search result cache
     # fall back to best-by-reward if nothing met the constraints
     if best is None:
         valid = [
@@ -157,7 +252,8 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
         if valid:
             best = max(valid, key=lambda t: t[0]["reward"])[0]
     return SearchResult(best_vec, best, history, space,
-                        time.monotonic() - t0, engine.stats.as_dict())
+                        wall_base + time.monotonic() - t0,
+                        engine.stats.as_dict())
 
 
 def joint_search(
@@ -169,8 +265,12 @@ def joint_search(
     engine: Optional[EvaluationEngine] = None,
     predictor=None,
     scenario: Optional[Scenario] = None,
+    runtime=None,
+    checkpoint_dir: Optional[str] = None,
+    tag: str = "joint",
 ) -> SearchResult:
     rcfg = _objective(rcfg, scenario)
+    runtime = _as_runtime(runtime, checkpoint_dir)
     has_space = has_space or has_lib.has_space()
     joint = concat(nas_space, has_space)
     if engine is not None and predictor is not None:
@@ -180,14 +280,15 @@ def joint_search(
         engine = EvaluationEngine(
             nas_space, has_space, acc_fn, rcfg,
             proxy_batch=cfg.proxy_batch, cache=cfg.cache, predictor=predictor,
-            store=cfg.store,
+            store=_runtime_store(cfg, runtime),
             label=None if scenario is None else scenario.name,
         )
     warm = None
     if cfg.hot_start and cfg.controller in ("ppo", "reinforce"):
         base = has_lib.baseline_vec(has_space)
         warm = (nas_space.num_decisions, base, cfg.hot_start_logit)
-    return _drive(joint, engine, cfg, warm_has=warm, scenario=scenario)
+    return _drive(joint, engine, cfg, warm_has=warm, scenario=scenario,
+                  runtime=runtime, tag=tag)
 
 
 def fixed_hw_search(
@@ -198,16 +299,22 @@ def fixed_hw_search(
     h=None,
     engine: Optional[EvaluationEngine] = None,
     scenario: Optional[Scenario] = None,
+    runtime=None,
+    checkpoint_dir: Optional[str] = None,
+    tag: str = "fixed_hw",
 ) -> SearchResult:
     rcfg = _objective(rcfg, scenario)
+    runtime = _as_runtime(runtime, checkpoint_dir)
     h = h or has_lib.BASELINE
     if engine is None:
         engine = EvaluationEngine(
             nas_space, None, acc_fn, rcfg, fixed_h=h,
-            proxy_batch=cfg.proxy_batch, cache=cfg.cache, store=cfg.store,
+            proxy_batch=cfg.proxy_batch, cache=cfg.cache,
+            store=_runtime_store(cfg, runtime),
             label=None if scenario is None else scenario.name,
         )
-    return _drive(nas_space, engine, cfg, scenario=scenario)
+    return _drive(nas_space, engine, cfg, scenario=scenario,
+                  runtime=runtime, tag=tag)
 
 
 def phase_search(
@@ -217,11 +324,17 @@ def phase_search(
     cfg: SearchConfig = SearchConfig(),
     initial_arch_vec: Optional[np.ndarray] = None,
     scenario: Optional[Scenario] = None,
+    runtime=None,
+    checkpoint_dir: Optional[str] = None,
+    tag: str = "phase",
 ) -> SearchResult:
     """Fig. 9: phase 1 = HAS on a fixed initial architecture (soft constraint),
     phase 2 = NAS on the selected accelerator (hard constraint). The sample
-    budget is split between the phases."""
+    budget is split between the phases. With a runtime checkpointer, each
+    phase checkpoints under its own sub-tag; a completed phase replays from
+    its checkpoint on resume instead of re-searching."""
     rcfg = _objective(rcfg, scenario)
+    runtime = _as_runtime(runtime, checkpoint_dir)
     hspace = has_lib.has_space()
     rng = np.random.default_rng(cfg.seed)
     a0 = (initial_arch_vec if initial_arch_vec is not None
@@ -233,17 +346,18 @@ def phase_search(
     h_engine = EvaluationEngine(
         None, hspace, None, soft, fixed_spec=spec0, fixed_acc=acc0,
         constraint_mode="area_only", proxy_batch=cfg.proxy_batch,
-        cache=cfg.cache, store=cfg.store,
+        cache=cfg.cache, store=_runtime_store(cfg, runtime),
         label=None if scenario is None else scenario.name,
     )
     half = dataclasses.replace(cfg, samples=cfg.samples // 2)
-    phase1 = _drive(hspace, h_engine, half, scenario=scenario)
+    phase1 = _drive(hspace, h_engine, half, scenario=scenario,
+                    runtime=runtime, tag=f"{tag}.has")
     h_best = (hspace.decode(phase1.best_vec) if phase1.best_vec is not None
               else has_lib.BASELINE)
     phase2 = fixed_hw_search(
         nas_space, acc_fn, rcfg,
         dataclasses.replace(cfg, samples=cfg.samples - half.samples),
-        h=h_best, scenario=scenario,
+        h=h_best, scenario=scenario, runtime=runtime, tag=f"{tag}.nas",
     )
     history = phase1.history + phase2.history
     return SearchResult(phase2.best_vec, phase2.best_record, history,
@@ -259,9 +373,16 @@ def nested_search(
     cfg: SearchConfig = SearchConfig(),
     outer: int = 8,
     scenario: Optional[Scenario] = None,
+    runtime=None,
+    checkpoint_dir: Optional[str] = None,
+    tag: str = "nested",
 ) -> SearchResult:
-    """Outer loop over hardware samples; a small NAS per hardware config."""
+    """Outer loop over hardware samples; a small NAS per hardware config.
+    Each inner NAS checkpoints under its own sub-tag; the outer hardware
+    draws are deterministic from the seed, so resume replays completed
+    inners from their checkpoints and re-derives the h sequence for free."""
     rcfg = _objective(rcfg, scenario)
+    runtime = _as_runtime(runtime, checkpoint_dir)
     hspace = has_lib.has_space()
     rng = np.random.default_rng(cfg.seed)
     inner_budget = max(cfg.samples // outer, 4)
@@ -275,7 +396,7 @@ def nested_search(
         res = fixed_hw_search(
             nas_space, acc_fn, rcfg,
             dataclasses.replace(cfg, samples=inner_budget, seed=cfg.seed + o),
-            h=h, scenario=scenario,
+            h=h, scenario=scenario, runtime=runtime, tag=f"{tag}.outer{o}",
         )
         history.extend(res.history)
         for key, v in res.engine_stats.items():  # aggregate over inner runs

@@ -57,6 +57,10 @@ class SweepConfig:
     # with private caches — the ablation `benchmarks/sweep_bench.py` reports)
     share_cache: bool = True
     objectives: tuple = DEFAULT_OBJECTIVES
+    # shorthand for a checkpoint-only runtime: per-scenario searches then
+    # checkpoint every batch and the sweep resumes mid-scenario (see
+    # repro.runtime; an explicit runtime passed to run() wins)
+    checkpoint_dir: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -150,6 +154,33 @@ class SweepResult:
         }
 
 
+def assemble_result(
+    results: list[tuple[Scenario, SearchResult]],
+    objectives=DEFAULT_OBJECTIVES,
+    store_stats: Optional[dict] = None,
+    wall_s: float = 0.0,
+) -> SweepResult:
+    """Fold (scenario, SearchResult) pairs into a ``SweepResult``: one global
+    frontier over every history record, winners selected per scenario off the
+    frontier. Shared by the serial ``SweepRunner`` and the concurrent
+    ``repro.runtime.SearchExecutor`` CLI path (both produce the same report,
+    and for identical seeds the same records)."""
+    frontier = ParetoFrontier(objectives)
+    for _, res in results:
+        frontier.add_many(res.history)
+    # select winners off the *global* frontier: a scenario may pick a config
+    # some other scenario's search discovered (reward and feasibility are
+    # monotone in the four metrics, so the frontier always contains an
+    # optimal record for every scenario)
+    outcomes = [ScenarioOutcome(sc, res, frontier.best(sc)) for sc, res in results]
+    return SweepResult(
+        outcomes=outcomes,
+        frontier=frontier,
+        store_stats=store_stats,
+        wall_s=wall_s,
+    )
+
+
 class SweepRunner:
     """Fan N scenarios over one search driver and one shared evaluation memo.
 
@@ -193,14 +224,25 @@ class SweepRunner:
             acc_fn = CachedAccuracy(acc_fn)
         self.acc_fn = acc_fn
 
-    def run(self, verbose: bool = False) -> SweepResult:
+    def run(self, verbose: bool = False, runtime=None) -> SweepResult:
+        """Run every scenario's search. ``runtime`` (or
+        ``cfg.checkpoint_dir``) attaches a search runtime: a shared —
+        possibly durable — store, per-scenario checkpointing (tag
+        ``sweep.<scenario>``), and a budget/stop token. A re-run with the
+        same runtime resumes: completed scenarios replay from their
+        checkpoints, the interrupted one continues mid-search, and a run
+        whose budget expires raises ``search.SearchInterrupted`` after
+        checkpointing."""
         cfg = self.cfg
-        # honor a caller-provided store (cross-run / cross-sweep reuse);
-        # otherwise build one per run when sharing is on
+        runtime = search_lib._as_runtime(runtime, cfg.checkpoint_dir)
+        # honor a caller-provided store (cross-run / cross-sweep reuse), then
+        # the runtime's shared store; otherwise build one per run when
+        # sharing is on
         store = cfg.search.store
+        if store is None and runtime is not None:
+            store = getattr(runtime, "store", None)
         if store is None and cfg.share_cache:
             store = RecordStore()
-        frontier = ParetoFrontier(cfg.objectives)
         driver = DRIVERS[cfg.driver]
         scfg = dataclasses.replace(cfg.search, store=store)
         t0 = time.monotonic()
@@ -212,26 +254,17 @@ class SweepRunner:
                     f"({cfg.driver}, {scfg.samples} samples)",
                     flush=True,
                 )
+            kw = dict(cfg=scfg, scenario=sc, runtime=runtime, tag=f"sweep.{sc.name}")
             if cfg.driver == "joint":
                 res = driver(
-                    self.nas_space,
-                    self.acc_fn,
-                    cfg=scfg,
-                    has_space=self.has_space,
-                    scenario=sc,
+                    self.nas_space, self.acc_fn, has_space=self.has_space, **kw
                 )
             else:
-                res = driver(self.nas_space, self.acc_fn, cfg=scfg, scenario=sc)
-            frontier.add_many(res.history)
+                res = driver(self.nas_space, self.acc_fn, **kw)
             results.append((sc, res))
-        # select winners off the *global* frontier: a scenario may pick a
-        # config some other scenario's search discovered (reward and
-        # feasibility are monotone in the four metrics, so the frontier always
-        # contains an optimal record for every scenario)
-        outcomes = [ScenarioOutcome(sc, res, frontier.best(sc)) for sc, res in results]
-        return SweepResult(
-            outcomes=outcomes,
-            frontier=frontier,
+        return assemble_result(
+            results,
+            objectives=cfg.objectives,
             store_stats=None if store is None else store.stats.as_dict(),
             wall_s=time.monotonic() - t0,
         )

@@ -404,6 +404,8 @@ def embed(params: dict, tokens: jax.Array, cfg: ModelConfig, pc=None) -> jax.Arr
     if pc is not None and pc.tp and table.shape[1] % pc.model_size == 0:
         from jax.sharding import PartitionSpec as P
 
+        from repro.parallel._compat import shard_map
+
         bt = pc.batch_axes if len(pc.batch_axes) > 1 else pc.batch_axes[0]
         tok_spec = P(bt, None) if tokens.shape[0] % pc.batch_size == 0 else P(None, None)
         out_spec = P(tok_spec[0], None, pc.model_axis)
@@ -411,7 +413,7 @@ def embed(params: dict, tokens: jax.Array, cfg: ModelConfig, pc=None) -> jax.Arr
         def body(tok, tab):
             return tab.astype(cdt)[tok]
 
-        x = jax.shard_map(
+        x = shard_map(
             body,
             mesh=pc.mesh,
             in_specs=(tok_spec, P(None, pc.model_axis)),

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.common import dtype_of, fold_rng, round_up
+from repro.parallel._compat import shard_map
 from repro.config import ModelConfig
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -167,7 +168,7 @@ def moe_ffn(
             aux = jax.lax.pmean(aux, pc.all_axes)
             return out, aux
 
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             body,
             mesh=pc.mesh,
             in_specs=(P(bspec, None, None), P(None, None), w_spec, w_spec, wo_spec),
@@ -191,7 +192,7 @@ def moe_ffn(
         aux = jax.lax.pmean(aux, pc.all_axes)
         return out, aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=pc.mesh,
         in_specs=(P(bspec, None, None), P(None, None), w_spec, w_spec, wo_spec),

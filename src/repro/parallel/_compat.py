@@ -1,0 +1,27 @@
+"""Version compat for the sharding API.
+
+jax moved ``shard_map`` out of ``jax.experimental`` (and renamed its
+``check_rep`` flag to ``check_vma``) after 0.4.x. The parallel modules code
+against the new spelling; this shim keeps them importable and runnable on the
+0.4.x series the container ships (see also ``repro.kernels._compat`` for the
+Pallas equivalent).
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_old(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )

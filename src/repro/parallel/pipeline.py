@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel._compat import shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable,  # (stage_params, x) -> y  (same shape)
@@ -63,7 +65,7 @@ def pipeline_apply(
         )
         return out
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(stage_axis), P()),

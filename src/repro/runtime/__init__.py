@@ -1,0 +1,51 @@
+"""Durable search runtime: persistence, checkpoint/resume, concurrency.
+
+The production layer over ``repro.core``'s search stack:
+
+* ``DurableRecordStore`` — the engine's raw-metric memo with an append-only
+  JSONL log: a new process rehydrates it and starts at the prior hit rate
+  (``repro.runtime.store``);
+* ``Checkpointer`` — atomic tagged snapshots of controller + search
+  progress; resume reproduces the bitwise-identical remaining trajectory
+  (``repro.runtime.checkpoint``);
+* ``SearchRuntime`` / ``Budget`` / ``StopToken`` / ``SearchExecutor`` —
+  budgeted, gracefully-stoppable concurrent execution of many searches over
+  one shared store (``repro.runtime.executor``).
+
+Entry points: pass ``runtime=SearchRuntime.at(dir, store_path)`` (or just
+``checkpoint_dir=``) to any ``repro.core.search`` driver or
+``sweep.SweepRunner``; ``scripts/sweep.py --store/--resume`` and
+``scripts/runtime_serve.py`` are the CLIs. See docs/architecture.md
+("Search runtime").
+"""
+from repro.runtime.checkpoint import (
+    Checkpointer,
+    result_from_state,
+    result_state,
+)
+from repro.runtime.executor import (
+    Budget,
+    ExecutorReport,
+    JobOutcome,
+    SearchExecutor,
+    SearchJob,
+    SearchRuntime,
+    StopToken,
+    scenario_jobs,
+)
+from repro.runtime.store import DurableRecordStore
+
+__all__ = [
+    "Budget",
+    "Checkpointer",
+    "DurableRecordStore",
+    "ExecutorReport",
+    "JobOutcome",
+    "SearchExecutor",
+    "SearchJob",
+    "SearchRuntime",
+    "StopToken",
+    "result_from_state",
+    "result_state",
+    "scenario_jobs",
+]

@@ -1,0 +1,145 @@
+"""Driver-agnostic checkpoint/resume for the search stack.
+
+``Checkpointer`` is a tiny tagged blob store over one directory: each tag is
+a single pickle file written atomically (temp file + ``os.replace``), so a
+kill mid-save never corrupts the previous checkpoint. The search drivers
+(``repro.core.search._drive``) persist under a tag per search:
+
+* controller state — policy logits, Adam moments, RNG bit-generator state,
+  reward baselines (``controllers.*.state()``; numpy/python only, restored
+  bitwise, which is what makes the resumed trajectory identical to an
+  uninterrupted run);
+* progress — samples done, accumulated history (every evaluated record),
+  the best record/vector so far, wall-clock so far;
+* identity metadata — space, controller, seed, sample budget, scenario —
+  validated on resume so a tag can never silently resume a different search.
+
+Composite drivers reuse the same mechanism per part: ``phase_search``
+checkpoints ``<tag>.has`` / ``<tag>.nas``, ``nested_search``
+``<tag>.outerN``, and ``SweepRunner`` ``sweep.<scenario>``. A *completed*
+search's checkpoint doubles as its result cache: re-running the call replays
+the finished ``SearchResult`` without evaluating anything — which is exactly
+how resume skips finished phases/scenarios.
+
+``result_state``/``result_from_state`` serialize a ``SearchResult`` (minus
+the live ``Space`` object, which the caller re-supplies) for sweep- or
+service-level snapshots; ``ParetoFrontier`` serializes itself
+(``state()``/``from_state``, see ``repro.core.pareto``).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import re
+import tempfile
+from pathlib import Path
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core.search import SearchResult
+
+_TAG_RE = re.compile(r"[^A-Za-z0-9._-]")
+
+
+def _tag_file(tag: str) -> str:
+    """Filesystem-safe file name for a tag (collisions are fine to ignore:
+    tags come from driver/scenario names, which are already distinct after
+    this substitution)."""
+    return _TAG_RE.sub("_", tag) + ".ckpt"
+
+
+class Checkpointer:
+    """Atomic tagged pickle blobs in one directory (see module doc)."""
+
+    def __init__(self, root: Union[str, Path]):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        for stray in self.root.glob("*.tmp"):  # a kill mid-save leaves these
+            try:
+                stray.unlink()
+            except OSError:
+                pass
+
+    def _path(self, tag: str) -> Path:
+        return self.root / _tag_file(tag)
+
+    def save(self, tag: str, state: dict) -> Path:
+        path = self._path(tag)
+        fd, tmp = tempfile.mkstemp(
+            prefix=path.name + ".", suffix=".tmp", dir=str(self.root)
+        )
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(state, f, protocol=pickle.HIGHEST_PROTOCOL)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    def load(self, tag: str) -> Optional[dict]:
+        path = self._path(tag)
+        if not path.exists():
+            return None
+        with open(path, "rb") as f:
+            return pickle.load(f)
+
+    def exists(self, tag: str) -> bool:
+        return self._path(tag).exists()
+
+    def delete(self, tag: str) -> bool:
+        try:
+            self._path(tag).unlink()
+            return True
+        except FileNotFoundError:
+            return False
+
+    def tags(self) -> list[str]:
+        return sorted(p.stem for p in self.root.glob("*.ckpt"))
+
+    def clear(self) -> int:
+        n = 0
+        for p in self.root.glob("*.ckpt"):
+            p.unlink()
+            n += 1
+        return n
+
+
+# ---------------------------------------------------------------------------
+# result snapshots
+# ---------------------------------------------------------------------------
+
+
+def result_state(result: SearchResult) -> dict:
+    """``SearchResult`` minus the live ``Space`` object (callers re-supply
+    it on restore — spaces are code, not data)."""
+    return {
+        "best_vec": None if result.best_vec is None else np.asarray(result.best_vec),
+        "best_record": result.best_record,
+        "history": result.history,
+        "space": result.space.name,
+        "wall_s": result.wall_s,
+        "engine_stats": result.engine_stats,
+    }
+
+
+def result_from_state(state: dict, space) -> SearchResult:
+    if space is not None and space.name != state["space"]:
+        raise ValueError(
+            f"result was produced over space {state['space']!r}, "
+            f"got {space.name!r}"
+        )
+    return SearchResult(
+        best_vec=None if state["best_vec"] is None else np.asarray(state["best_vec"]),
+        best_record=state["best_record"],
+        history=list(state["history"]),
+        space=space,
+        wall_s=state["wall_s"],
+        engine_stats=state["engine_stats"],
+    )

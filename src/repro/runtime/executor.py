@@ -1,0 +1,252 @@
+"""Concurrent multi-search execution over one shared record store.
+
+``SearchExecutor`` runs N searches (typically one per deployment scenario)
+on a thread pool against a single ``RecordStore`` /
+``DurableRecordStore``. Python threads are the right concurrency unit here:
+the engine's batched ``simulator.simulate_batch`` path spends its time in
+numpy, and controller updates in jax — both release the GIL — so concurrent
+searches overlap one search's controller update with another's evaluation
+pass, and every evaluation lands in the shared memo where sibling searches
+hit it for free (the sweep's cross-scenario amortization, now concurrent).
+
+Scheduling is budgeted: a ``Budget`` grants evaluation tokens (samples)
+and/or wall-clock until a deadline; ``SearchRuntime.admit`` is consulted by
+every driver at each batch boundary, and a denial makes the driver
+checkpoint (when a ``Checkpointer`` is attached) and raise
+``SearchInterrupted``. ``SearchExecutor.stop()`` is the graceful stop: it
+trips the shared ``StopToken`` so every in-flight search checkpoints at its
+next batch boundary; a later run with the same checkpoint directory resumes
+all of them, completed ones replaying for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+from typing import Callable, Optional, Union
+
+from repro.core.engine import RecordStore
+from repro.core.pareto import DEFAULT_OBJECTIVES, ParetoFrontier
+from repro.core.search import SearchInterrupted, SearchResult
+
+from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.store import DurableRecordStore
+
+
+class StopToken:
+    """A latching stop request shared by every search under one runtime."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self.reason: Optional[str] = None
+
+    def set(self, reason: str = "stop requested") -> None:
+        self.reason = reason
+        self._event.set()
+
+    def is_set(self) -> bool:
+        return self._event.is_set()
+
+
+class Budget:
+    """Token/deadline admission: ``admit(n)`` reserves ``n`` evaluation
+    tokens if the sample budget allows and the deadline has not passed.
+    Thread-safe; a single denial latches (``exhausted``) so concurrent
+    searches stop at the same scheduling decision."""
+
+    def __init__(
+        self,
+        max_samples: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+    ):
+        self.max_samples = max_samples
+        self.deadline_s = deadline_s
+        self._t0 = time.monotonic()
+        self._granted = 0
+        self._lock = threading.Lock()
+        self.exhausted = False
+
+    @property
+    def granted(self) -> int:
+        return self._granted
+
+    def elapsed_s(self) -> float:
+        return time.monotonic() - self._t0
+
+    def admit(self, n: int) -> bool:
+        with self._lock:
+            if self.deadline_s is not None and self.elapsed_s() >= self.deadline_s:
+                self.exhausted = True
+                return False
+            if self.max_samples is not None and self._granted + n > self.max_samples:
+                self.exhausted = True
+                return False
+            self._granted += n
+            return True
+
+
+@dataclasses.dataclass
+class SearchRuntime:
+    """The durability/scheduling bundle drivers accept as ``runtime=``:
+    a shared (possibly durable) record store, a checkpointer, and the
+    admission controls. All fields optional — an empty runtime is inert."""
+
+    store: Optional[RecordStore] = None
+    checkpoint: Optional[Checkpointer] = None
+    budget: Optional[Budget] = None
+    stop: Optional[StopToken] = None
+    checkpoint_every: int = 1  # batches between periodic saves
+
+    @classmethod
+    def at(
+        cls,
+        checkpoint_dir: Union[str, Path],
+        store_path: Optional[Union[str, Path]] = None,
+        **kw,
+    ) -> "SearchRuntime":
+        """Checkpoint/store runtime rooted at paths (the CLI entry point)."""
+        store = None if store_path is None else DurableRecordStore(store_path)
+        return cls(store=store, checkpoint=Checkpointer(checkpoint_dir), **kw)
+
+    def admit(self, n: int) -> bool:
+        if self.stop is not None and self.stop.is_set():
+            return False
+        if self.budget is not None and not self.budget.admit(n):
+            return False
+        return True
+
+
+@dataclasses.dataclass
+class SearchJob:
+    """One named search: ``fn(**kwargs, runtime=, tag=)`` must return a
+    ``SearchResult`` (any ``repro.core.search`` driver qualifies)."""
+
+    name: str
+    fn: Callable[..., SearchResult]
+    kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class JobOutcome:
+    name: str
+    status: str  # "done" | "interrupted" | "error"
+    result: Optional[SearchResult] = None
+    error: Optional[BaseException] = None
+
+
+@dataclasses.dataclass
+class ExecutorReport:
+    outcomes: dict[str, JobOutcome]
+    frontier: ParetoFrontier
+    store_stats: Optional[dict]
+    wall_s: float
+
+    @property
+    def done(self) -> list[str]:
+        return [n for n, o in self.outcomes.items() if o.status == "done"]
+
+    @property
+    def interrupted(self) -> list[str]:
+        return [n for n, o in self.outcomes.items() if o.status == "interrupted"]
+
+    @property
+    def errors(self) -> dict[str, BaseException]:
+        return {n: o.error for n, o in self.outcomes.items() if o.status == "error"}
+
+
+class SearchExecutor:
+    """Run many searches concurrently under one ``SearchRuntime``."""
+
+    def __init__(
+        self,
+        store: Optional[RecordStore] = None,
+        checkpoint: Optional[Checkpointer] = None,
+        max_workers: int = 4,
+        budget: Optional[Budget] = None,
+        checkpoint_every: int = 1,
+        objectives=DEFAULT_OBJECTIVES,
+    ):
+        self.max_workers = max_workers
+        self.objectives = objectives
+        self.stop_token = StopToken()
+        self.runtime = SearchRuntime(
+            store=store,
+            checkpoint=checkpoint,
+            budget=budget,
+            stop=self.stop_token,
+            checkpoint_every=checkpoint_every,
+        )
+
+    def stop(self, reason: str = "stop requested") -> None:
+        """Graceful stop: in-flight searches checkpoint at their next batch
+        boundary and report ``interrupted``."""
+        self.stop_token.set(reason)
+
+    def run(self, jobs: list[SearchJob]) -> ExecutorReport:
+        """Execute all jobs (at most ``max_workers`` at a time); never
+        raises on a per-search failure — inspect ``report.outcomes``."""
+        names = [j.name for j in jobs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate job names: {names}")
+        t0 = time.monotonic()
+
+        def run_one(job: SearchJob) -> JobOutcome:
+            try:
+                res = job.fn(**job.kwargs, runtime=self.runtime, tag=job.name)
+                return JobOutcome(job.name, "done", result=res)
+            except SearchInterrupted as e:
+                return JobOutcome(job.name, "interrupted", error=e)
+            except Exception as e:  # noqa: BLE001 - isolate sibling searches
+                return JobOutcome(job.name, "error", error=e)
+
+        with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+            outcomes = list(pool.map(run_one, jobs))
+
+        frontier = ParetoFrontier(self.objectives)
+        for o in outcomes:
+            if o.result is not None:
+                frontier.add_many(o.result.history)
+        store = self.runtime.store
+        if isinstance(store, DurableRecordStore):
+            store.flush()
+        return ExecutorReport(
+            outcomes={o.name: o for o in outcomes},
+            frontier=frontier,
+            store_stats=None if store is None else store.stats.as_dict(),
+            wall_s=time.monotonic() - t0,
+        )
+
+
+def scenario_jobs(
+    scenarios,
+    nas_space,
+    acc_fn,
+    cfg=None,
+    driver: str = "joint",
+) -> list[SearchJob]:
+    """One ``SearchJob`` per scenario over one driver — the concurrent
+    counterpart of ``sweep.SweepRunner`` (same tags, so the two are
+    checkpoint-compatible: a sweep interrupted serially can resume under the
+    executor and vice versa)."""
+    from repro.core import scenarios as scenarios_lib
+    from repro.core import sweep as sweep_lib
+    from repro.core.proxy import CachedAccuracy
+    from repro.core.search import SearchConfig
+
+    if driver not in sweep_lib.DRIVERS:
+        raise ValueError(
+            f"unknown driver {driver!r} (one of {sorted(sweep_lib.DRIVERS)})"
+        )
+    if not isinstance(acc_fn, CachedAccuracy):
+        acc_fn = CachedAccuracy(acc_fn)
+    cfg = cfg or SearchConfig()
+    return [
+        SearchJob(
+            name=f"sweep.{sc.name}",
+            fn=sweep_lib.DRIVERS[driver],
+            kwargs=dict(nas_space=nas_space, acc_fn=acc_fn, cfg=cfg, scenario=sc),
+        )
+        for sc in scenarios_lib.expand(scenarios)
+    ]

@@ -1,0 +1,153 @@
+"""DurableRecordStore — the engine's raw-metric memo, persisted.
+
+The paper's multi-use-case result (Sec. 4.5) rests on amortizing candidate
+evaluations across many searches; `engine.RecordStore` (PR 2) does that only
+within one process lifetime. `DurableRecordStore` extends it with an
+append-only JSONL log so the memo survives crashes, preemptions and new
+sessions:
+
+* **append-only**: every `put` appends one JSON line
+  ``{"k": <hex key>, "w": <writer label>, "r": <raw record>}`` and flushes,
+  so a hard kill loses at most the line being written;
+* **crash-safe load**: rehydration parses the log line by line, skips a
+  torn/corrupt trailing line (counted in ``loaded_dropped``), and applies
+  last-write-wins per key — a fresh process starts at the prior hit rate;
+* **content-addressed + namespace-aware**: keys are the engine's
+  ``sha1(namespace) ++ vec.tobytes()`` (see ``engine.split_key``); engine
+  namespaces are content-based where possible (``engine._identity_token``),
+  which is what makes cross-*process* hits sound;
+* **compaction**: duplicates and FIFO-evicted entries accumulate in the log;
+  ``compact()`` atomically rewrites it to exactly the live in-memory
+  entries (write temp file, ``os.replace``).
+
+Thread-safe like its base class: N concurrent searches
+(``repro.runtime.executor``) can share one durable store.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Optional, Union
+
+from repro.core.engine import RecordStore
+
+
+def _dump_line(key: bytes, raw: dict, writer: Optional[str]) -> str:
+    return json.dumps({"k": key.hex(), "w": writer, "r": raw}, separators=(",", ":"))
+
+
+class DurableRecordStore(RecordStore):
+    """A ``RecordStore`` backed by an append-only JSONL log (module doc)."""
+
+    def __init__(
+        self,
+        path: Union[str, Path],
+        max_entries: int = 1_000_000,
+        fsync: bool = False,
+    ):
+        super().__init__(max_entries)
+        self.path = Path(path)
+        self.fsync = fsync
+        self.loaded = 0          # entries rehydrated from the log
+        self.loaded_dropped = 0  # corrupt / torn lines skipped on load
+        self.appended = 0        # lines this process appended
+        self._file = None
+        if self.path.exists():
+            self._load()
+
+    # ---- persistence ------------------------------------------------------
+
+    def _load(self) -> None:
+        """Rehydrate the in-memory memo from the log (last write wins)."""
+        with self._lock:
+            with open(self.path, "r", encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        ent = json.loads(line)
+                        key = bytes.fromhex(ent["k"])
+                        raw, writer = ent["r"], ent.get("w")
+                    except (ValueError, KeyError, TypeError):
+                        # torn append from a killed writer (or stray bytes):
+                        # skip, keep everything that parsed
+                        self.loaded_dropped += 1
+                        continue
+                    fresh = key not in self._data
+                    self._insert(key, raw, writer)
+                    if fresh:
+                        self.loaded += 1
+
+    def _handle(self):
+        if self._file is None:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._file = open(self.path, "a", encoding="utf-8")
+        return self._file
+
+    def _append(self, key: bytes, raw: dict, writer: Optional[str]) -> None:
+        f = self._handle()
+        f.write(_dump_line(key, raw, writer) + "\n")
+        f.flush()
+        if self.fsync:
+            os.fsync(f.fileno())
+        self.appended += 1
+
+    # ---- RecordStore interface -------------------------------------------
+
+    def put(self, key: bytes, raw: dict, writer: Optional[str] = None) -> None:
+        with self._lock:
+            super().put(key, raw, writer)
+            self._append(key, raw, writer)
+
+    def compact(self) -> int:
+        """Atomically rewrite the log to the live entries; returns the number
+        of log lines dropped (stale duplicates + evicted keys)."""
+        with self._lock:
+            if self._file is not None:
+                self._file.close()
+                self._file = None
+            before = 0
+            if self.path.exists():
+                with open(self.path, "r", encoding="utf-8") as f:
+                    before = sum(1 for ln in f if ln.strip())
+            fd, tmp = tempfile.mkstemp(
+                prefix=self.path.name + ".",
+                suffix=".compact",
+                dir=str(self.path.parent),
+            )
+            try:
+                with os.fdopen(fd, "w", encoding="utf-8") as f:
+                    for key, (raw, writer) in self._data.items():
+                        f.write(_dump_line(key, raw, writer) + "\n")
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            return before - len(self._data)
+
+    def flush(self) -> None:
+        with self._lock:
+            if self._file is not None:
+                self._file.flush()
+                if self.fsync:
+                    os.fsync(self._file.fileno())
+
+    def close(self) -> None:
+        with self._lock:
+            if self._file is not None:
+                self._file.close()
+                self._file = None
+
+    def __enter__(self) -> "DurableRecordStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

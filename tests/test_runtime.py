@@ -1,0 +1,360 @@
+"""Durable search runtime: persistent store round-trips, log compaction,
+checkpoint/resume bitwise-trajectory equality, budgeted interruption, and
+concurrent-executor consistency over one shared store."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import nas, proxy, scenarios, search, sweep
+from repro.core.engine import EvaluationEngine, RecordStore, split_key
+from repro.core.search import SearchConfig, SearchInterrupted
+from repro.runtime import (
+    Budget,
+    Checkpointer,
+    DurableRecordStore,
+    SearchExecutor,
+    SearchRuntime,
+    scenario_jobs,
+)
+
+SC = scenarios.get("lat-0.3ms")
+
+
+def _acc():
+    return proxy.SurrogateAccuracy()
+
+
+def _joint_vecs(nspace, hspace, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([np.concatenate([nspace.sample(rng), hspace.sample(rng)])
+                     for _ in range(n)])
+
+
+def _engine(store):
+    from repro.core import has as has_lib
+    nspace, hspace = nas.tiny_space(), has_lib.has_space()
+    eng = EvaluationEngine(nspace, hspace, _acc(), SC.reward_config(),
+                           store=store, label="t")
+    return eng, nspace, hspace
+
+
+# ---------------------------------------------------------------------------
+# durable store
+# ---------------------------------------------------------------------------
+
+
+def test_durable_store_roundtrip_preserves_hit_rate(tmp_path):
+    """write -> kill (no close) -> reload -> the fresh process re-simulates
+    nothing: the prior hit rate carries over because engine namespaces are
+    content-based."""
+    path = tmp_path / "s.jsonl"
+    store = DurableRecordStore(path)
+    eng, nspace, hspace = _engine(store)
+    vecs = _joint_vecs(nspace, hspace, 24, seed=3)
+    recs = eng.evaluate_batch(vecs)
+    assert store.stats.puts == 24
+    # no close(): puts flush line by line, so a kill here loses nothing
+
+    store2 = DurableRecordStore(path)
+    assert store2.loaded == 24 and store2.loaded_dropped == 0
+    eng2, _, _ = _engine(store2)
+    recs2 = eng2.evaluate_batch(vecs)
+    assert eng2.stats.evaluated == 0  # zero re-simulation
+    assert store2.stats.hit_rate == 1.0
+    assert recs2 == recs  # bitwise: same raw metrics, same scoring
+    store.close()
+    store2.close()
+
+
+def test_durable_store_skips_torn_trailing_line(tmp_path):
+    path = tmp_path / "s.jsonl"
+    store = DurableRecordStore(path)
+    eng, nspace, hspace = _engine(store)
+    eng.evaluate_batch(_joint_vecs(nspace, hspace, 8, seed=1))
+    store.close()
+    with open(path, "a") as f:
+        f.write('{"k": "dead', )  # torn append from a killed writer
+    store2 = DurableRecordStore(path)
+    assert store2.loaded == 8
+    assert store2.loaded_dropped == 1
+    store2.close()
+
+
+def test_durable_store_compaction(tmp_path):
+    path = tmp_path / "s.jsonl"
+    store = DurableRecordStore(path)
+    key = b"n" * 20 + np.asarray([1, 2], np.int64).tobytes()
+    for i in range(5):  # 5 appends, 1 live key
+        store.put(key, {"valid": True, "accuracy": float(i)}, writer="w")
+    other = b"n" * 20 + np.asarray([3, 4], np.int64).tobytes()
+    store.put(other, {"valid": False}, writer=None)
+    dropped = store.compact()
+    assert dropped == 4
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    assert len(lines) == len(store) == 2
+    store.close()
+
+    store2 = DurableRecordStore(path)
+    assert store2.loaded == 2
+    assert store2.get(key, reader="r")["accuracy"] == 4.0
+    assert split_key(key) == (b"n" * 20, (1, 2))
+    store2.close()
+
+
+def test_record_store_fifo_eviction_counted():
+    store = RecordStore(max_entries=4)
+    keys = [bytes([i]) * 4 for i in range(6)]
+    for k in keys:
+        store.put(k, {"valid": True})
+    assert len(store) == 4
+    assert store.stats.evictions == 2
+    assert store.get(keys[0]) is None and store.get(keys[1]) is None
+    assert store.get(keys[2]) is not None  # oldest-first: 0 and 1 went
+    # re-putting an existing key must not evict
+    store.put(keys[2], {"valid": True})
+    assert store.stats.evictions == 2
+    assert store.stats.as_dict()["evictions"] == 2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("controller", ["ppo", "evolution"])
+def test_joint_search_resume_is_bitwise_identical(tmp_path, controller):
+    """Interrupt a joint search mid-run, resume it from its checkpoint in a
+    fresh runtime: the remaining trajectory — every record, the best pick —
+    is bitwise identical to an uninterrupted run."""
+    space = nas.tiny_space()
+    cfg = SearchConfig(samples=32, batch=8, seed=0, controller=controller)
+    ref = search.joint_search(space, _acc(), cfg=cfg, scenario=SC)
+
+    rt = SearchRuntime(store=DurableRecordStore(tmp_path / "s.jsonl"),
+                       checkpoint=Checkpointer(tmp_path / "ck"),
+                       budget=Budget(max_samples=16))
+    with pytest.raises(SearchInterrupted) as ei:
+        search.joint_search(space, _acc(), cfg=cfg, scenario=SC,
+                            runtime=rt, tag="t")
+    assert ei.value.samples_done == 16
+    rt.store.close()
+
+    rt2 = SearchRuntime(store=DurableRecordStore(tmp_path / "s.jsonl"),
+                        checkpoint=Checkpointer(tmp_path / "ck"))
+    res = search.joint_search(space, _acc(), cfg=cfg, scenario=SC,
+                              runtime=rt2, tag="t")
+    assert res.history == ref.history
+    assert res.best_record == ref.best_record
+    assert np.array_equal(res.best_vec, ref.best_vec)
+    # the resumed half re-simulated nothing the interrupted half paid for
+    assert res.engine_stats["evaluated"] <= 16
+    rt2.store.close()
+
+
+def test_completed_checkpoint_replays_without_evaluation(tmp_path):
+    space = nas.tiny_space()
+    cfg = SearchConfig(samples=16, batch=8, seed=0)
+    rt = SearchRuntime(checkpoint=Checkpointer(tmp_path / "ck"))
+    ref = search.joint_search(space, _acc(), cfg=cfg, scenario=SC,
+                              runtime=rt, tag="t")
+    res = search.joint_search(space, _acc(), cfg=cfg, scenario=SC,
+                              runtime=rt, tag="t")
+    assert res.engine_stats["requested"] == 0  # pure replay
+    assert res.history == ref.history
+
+
+def test_checkpoint_refuses_mismatched_search(tmp_path):
+    space = nas.tiny_space()
+    rt = SearchRuntime(checkpoint=Checkpointer(tmp_path / "ck"))
+    search.joint_search(space, _acc(), cfg=SearchConfig(samples=8, batch=8),
+                        scenario=SC, runtime=rt, tag="t")
+    with pytest.raises(ValueError, match="different search"):
+        search.joint_search(space, _acc(),
+                            cfg=SearchConfig(samples=8, batch=8, seed=7),
+                            scenario=SC, runtime=rt, tag="t")
+    with pytest.raises(ValueError, match="different search"):  # batch differs
+        search.joint_search(space, _acc(),
+                            cfg=SearchConfig(samples=8, batch=4),
+                            scenario=SC, runtime=rt, tag="t")
+    with pytest.raises(ValueError, match="different search"):  # objective
+        search.joint_search(space, _acc(),
+                            cfg=SearchConfig(samples=8, batch=8),
+                            scenario=scenarios.get("lat-1.3ms"),
+                            runtime=rt, tag="t")
+
+
+def test_result_and_frontier_snapshots_round_trip():
+    from repro.core.pareto import ParetoFrontier
+    from repro.runtime import result_from_state, result_state
+
+    space = nas.tiny_space()
+    ref = search.joint_search(space, _acc(),
+                              cfg=SearchConfig(samples=16, batch=8),
+                              scenario=SC)
+    back = result_from_state(result_state(ref), ref.space)
+    assert back.history == ref.history
+    assert back.best_record == ref.best_record
+    assert np.array_equal(back.best_vec, ref.best_vec)
+    with pytest.raises(ValueError, match="space"):
+        result_from_state(result_state(ref), space)  # "tiny" != "joint"
+
+    f = ref.frontier()
+    f2 = ParetoFrontier.from_state(f.state())
+    assert f2.records() == f.records()
+    assert (f2.offered, f2.admitted) == (f.offered, f.admitted)
+
+
+def test_sweep_resume_matches_uninterrupted(tmp_path):
+    scs = ["lat-0.3ms", "energy-0.7mJ", "edge-sku-small"]
+    mk = lambda: sweep.SweepRunner(
+        scs, nas.tiny_space(), _acc(),
+        sweep.SweepConfig(search=SearchConfig(samples=24, batch=8, seed=0)))
+    ref = mk().run()
+
+    rt = SearchRuntime(store=DurableRecordStore(tmp_path / "s.jsonl"),
+                       checkpoint=Checkpointer(tmp_path / "ck"),
+                       budget=Budget(max_samples=40))
+    with pytest.raises(SearchInterrupted):
+        mk().run(runtime=rt)
+    rt.store.close()
+
+    rt2 = SearchRuntime(store=DurableRecordStore(tmp_path / "s.jsonl"),
+                        checkpoint=Checkpointer(tmp_path / "ck"))
+    res = mk().run(runtime=rt2)
+    for a, b in zip(ref.outcomes, res.outcomes):
+        assert a.result.history == b.result.history
+        assert a.best == b.best
+    assert len(ref.frontier) == len(res.frontier)
+    rt2.store.close()
+
+
+def test_second_sweep_run_resimulates_nothing(tmp_path):
+    """The acceptance criterion: a sweep run twice against one durable store
+    performs zero re-simulations the second time (hit rate 100%)."""
+    scs = ["lat-0.3ms", "energy-0.7mJ"]
+    cfg = sweep.SweepConfig(search=SearchConfig(samples=24, batch=8, seed=0))
+
+    store = DurableRecordStore(tmp_path / "s.jsonl")
+    sweep.SweepRunner(scs, nas.tiny_space(), _acc(), cfg).run(
+        runtime=SearchRuntime(store=store))
+    paid = store.stats.puts
+    assert paid > 0
+    store.close()
+
+    store2 = DurableRecordStore(tmp_path / "s.jsonl")  # "new session"
+    assert store2.loaded == paid
+    res = sweep.SweepRunner(scs, nas.tiny_space(), _acc(), cfg).run(
+        runtime=SearchRuntime(store=store2))
+    assert store2.stats.puts == 0  # zero re-simulations
+    assert store2.stats.hit_rate == 1.0
+    assert all(o.best is not None for o in res.outcomes)
+    store2.close()
+
+
+# ---------------------------------------------------------------------------
+# concurrent executor
+# ---------------------------------------------------------------------------
+
+
+def test_executor_concurrent_store_consistency(tmp_path):
+    """4 scenario searches on 4 threads over one shared durable store:
+    per-scenario trajectories match the serial sweep bitwise, the store
+    holds exactly the union of evaluations, and the persisted log reloads
+    to the same contents."""
+    scs = ["lat-0.3ms", "lat-1.3ms", "energy-0.7mJ", "edge-sku-small"]
+    cfg = SearchConfig(samples=24, batch=8, seed=0)
+    serial = sweep.SweepRunner(
+        scs, nas.tiny_space(), _acc(), sweep.SweepConfig(search=cfg)).run()
+
+    store = DurableRecordStore(tmp_path / "s.jsonl")
+    ex = SearchExecutor(store=store, max_workers=4)
+    report = ex.run(scenario_jobs(scs, nas.tiny_space(), _acc(), cfg))
+    assert not report.errors and not report.interrupted
+    assert sorted(report.done) == sorted(f"sweep.{s}" for s in scs)
+
+    for o in serial.outcomes:
+        conc = report.outcomes[f"sweep.{o.scenario.name}"].result
+        assert conc.history == o.result.history
+    # store consistency: every put is live (puts may exceed len when two
+    # threads race the same key, but contents must be the deterministic union)
+    assert len(store) <= store.stats.puts
+    mem = {k: raw for k, raw, _ in store.entries()}
+    store.close()
+    store2 = DurableRecordStore(tmp_path / "s.jsonl")
+    disk = {k: raw for k, raw, _ in store2.entries()}
+    assert disk == mem
+    store2.close()
+    # same frontier as the serial sweep
+    assert {tuple(r["vec"]) for r in report.frontier.records()} == \
+        {tuple(r["vec"]) for r in serial.frontier.records()}
+
+
+def test_executor_budget_interrupts_and_resumes(tmp_path):
+    scs = ["lat-0.3ms", "lat-1.3ms"]
+    cfg = SearchConfig(samples=32, batch=8, seed=0)
+    store = DurableRecordStore(tmp_path / "s.jsonl")
+    ex = SearchExecutor(store=store, checkpoint=Checkpointer(tmp_path / "ck"),
+                        max_workers=2, budget=Budget(max_samples=24))
+    report = ex.run(scenario_jobs(scs, nas.tiny_space(), _acc(), cfg))
+    assert report.interrupted  # budget < total demand
+    store.close()
+
+    store2 = DurableRecordStore(tmp_path / "s.jsonl")
+    ex2 = SearchExecutor(store=store2,
+                         checkpoint=Checkpointer(tmp_path / "ck"),
+                         max_workers=2)
+    report2 = ex2.run(scenario_jobs(scs, nas.tiny_space(), _acc(), cfg))
+    assert sorted(report2.done) == sorted(f"sweep.{s}" for s in scs)
+    ref = sweep.SweepRunner(
+        scs, nas.tiny_space(), _acc(), sweep.SweepConfig(search=cfg)).run()
+    for o in ref.outcomes:
+        assert report2.outcomes[f"sweep.{o.scenario.name}"].result.history \
+            == o.result.history
+    store2.close()
+
+
+def test_executor_graceful_stop_checkpoints(tmp_path):
+    """stop() before run: every search checkpoints at its first batch
+    boundary and reports interrupted (the drain path of a shutdown)."""
+    scs = ["lat-0.3ms", "lat-1.3ms"]
+    cfg = SearchConfig(samples=16, batch=8, seed=0)
+    ex = SearchExecutor(checkpoint=Checkpointer(tmp_path / "ck"),
+                        max_workers=2)
+    ex.stop("preempted")
+    report = ex.run(scenario_jobs(scs, nas.tiny_space(), _acc(), cfg))
+    assert sorted(report.interrupted) == sorted(f"sweep.{s}" for s in scs)
+    assert sorted(Checkpointer(tmp_path / "ck").tags()) == \
+        sorted(f"sweep.{s}" for s in scs)
+
+
+# ---------------------------------------------------------------------------
+# serve CLI
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_serve_answers_from_persisted_store(tmp_path):
+    store = DurableRecordStore(tmp_path / "s.jsonl")
+    search.joint_search(
+        nas.tiny_space(), _acc(), cfg=SearchConfig(samples=16, batch=8),
+        scenario=SC, runtime=SearchRuntime(store=store))
+    store.close()
+
+    script = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                          "runtime_serve.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, script, "--store", str(tmp_path / "s.jsonl"),
+         "--scenario", "lat-0.3ms", "--query", "lat=0.5,area=40", "--json"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    lines = [json.loads(ln) for ln in r.stdout.splitlines() if ln.strip()]
+    assert len(lines) == 2
+    assert lines[0]["scenario"] == "lat-0.3ms"
+    assert lines[0]["best"] is not None
+    assert "vec" in lines[0]["best"]
