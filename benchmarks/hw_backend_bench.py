@@ -1,0 +1,119 @@
+"""Hardware cost-backend cascade vs the full analytic backend on the quick
+sweep preset (paper-use-cases × tiny space): wall time, full-simulation
+count, and per-scenario best-config agreement.
+
+Two comparisons:
+
+* **in the loop** — the cascade drives the PPO sweep itself (what
+  ``scripts/sweep.py --backend cascade`` runs): wall-clock and how many
+  candidates reached the full simulator.
+* **replay** — the analytic sweep's deduplicated candidate stream replayed
+  through the cascade. On a fixed stream the prefilter rules are
+  conservative by construction, so the per-scenario frontier picks must
+  match the analytic backend's exactly while full simulations drop ≥2x —
+  the ISSUE 4 acceptance numbers (also asserted in
+  ``tests/test_hw_backend.py``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import nas, proxy, sweep
+from repro.core.engine import EvaluationEngine
+from repro.core.pareto import ParetoFrontier
+from repro.core.search import SearchConfig
+from repro.hw import CascadeBackend
+
+PRESET = "paper-use-cases"
+
+
+def _runner(samples: int, backend=None) -> sweep.SweepRunner:
+    cfg = sweep.SweepConfig(
+        search=SearchConfig(samples=samples, batch=16, seed=0),
+        backend=backend)
+    return sweep.SweepRunner(PRESET, nas.tiny_space(),
+                             proxy.SurrogateAccuracy(), cfg)
+
+
+def run(fast: bool = True) -> dict:
+    samples = 96 if fast else 256
+
+    # --- full analytic sweep (the baseline) ---
+    t0 = time.monotonic()
+    analytic = _runner(samples).run()
+    analytic_wall = time.monotonic() - t0
+    analytic_sims = analytic.store_stats["puts"]
+
+    # --- cascade in the loop ---
+    runner_c = _runner(samples)
+    casc_loop = CascadeBackend(scenarios=tuple(runner_c.scenarios))
+    runner_c.cfg.backend = casc_loop
+    t0 = time.monotonic()
+    cascade = runner_c.run()
+    cascade_wall = time.monotonic() - t0
+    loop_feasible = sum(1 for o in cascade.outcomes if o.feasible)
+
+    # --- replay agreement: the analytic stream through the cascade ---
+    seen: set = set()
+    stream: list = []
+    for outcome in analytic.outcomes:
+        for rec in outcome.result.history:
+            if rec["vec"] not in seen:
+                seen.add(rec["vec"])
+                stream.append(rec["vec"])
+    runner_r = _runner(samples)
+    casc_replay = CascadeBackend(scenarios=tuple(runner_r.scenarios))
+    eng = EvaluationEngine(
+        runner_r.nas_space, runner_r.has_space, runner_r.acc_fn,
+        runner_r.scenarios[0].reward_config(), backend=casc_replay,
+        cache=False)
+    t0 = time.monotonic()
+    recs = eng.evaluate_batch(np.array(stream, dtype=np.int64))
+    replay_wall = time.monotonic() - t0
+    frontier = ParetoFrontier()
+    for vec, rec in zip(stream, recs):
+        rec["vec"] = vec
+        frontier.add(rec)
+    agree = sum(
+        1 for sc in runner_r.scenarios
+        if (frontier.best(sc) or {}).get("vec")
+        == (analytic.frontier.best(sc) or {}).get("vec")
+    )
+    n_sc = len(runner_r.scenarios)
+
+    sim_ratio = analytic_sims / max(casc_replay.stats.refined, 1)
+    return {
+        "samples_per_scenario": samples,
+        "scenarios": n_sc,
+        "analytic_wall_s": analytic_wall,
+        "analytic_full_sims": analytic_sims,
+        "cascade_wall_s": cascade_wall,
+        "cascade_loop_full_sims": casc_loop.stats.refined,
+        "cascade_loop_stats": casc_loop.stats.as_dict(),
+        "cascade_loop_feasible": loop_feasible,
+        "replay_wall_s": replay_wall,
+        "replay_full_sims": casc_replay.stats.refined,
+        "replay_stats": casc_replay.stats.as_dict(),
+        "replay_sim_ratio": sim_ratio,
+        "best_config_agreement": f"{agree}/{n_sc}",
+        "agreement_ok": agree == n_sc,
+        "n_evals": analytic_sims,
+        "derived": (
+            f"replay: {agree}/{n_sc} best configs agree at "
+            f"{sim_ratio:.1f}x fewer full sims "
+            f"({casc_replay.stats.refined}/{analytic_sims}); in-loop "
+            f"cascade {casc_loop.stats.refined} sims, "
+            f"{cascade_wall:.1f}s vs analytic {analytic_wall:.1f}s"
+        ),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    for k in ("analytic_full_sims", "cascade_loop_full_sims",
+              "replay_full_sims", "replay_sim_ratio",
+              "best_config_agreement"):
+        print(f"{k}: {out[k]}")
+    print(out["derived"])

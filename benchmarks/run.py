@@ -31,13 +31,14 @@ BENCHES = [
     ("table4_task2", "benchmarks.table4_task2"),
     ("hw_headroom", "benchmarks.hw_headroom"),
     ("sweep", "benchmarks.sweep_bench"),
+    ("hw_backend", "benchmarks.hw_backend_bench"),
     ("runtime", "benchmarks.runtime_bench"),
     ("oneshot", "benchmarks.oneshot_bench"),
     ("meshsearch", "benchmarks.meshsearch_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
 
-QUICK = ("engine", "roofline")
+QUICK = ("engine", "hw_backend", "roofline")
 
 
 def main() -> None:

@@ -14,7 +14,15 @@ the scenarios concurrently (``repro.runtime.SearchExecutor``), and
 ``--budget-samples`` / ``--deadline-s`` bound the run, checkpointing
 everything in flight when the budget expires (exit code 3: resumable).
 
+Backends (``--backend``, see ``repro.hw``): ``analytic`` (exact simulator,
+default), ``learned`` (an MLP cost model trained on the fly, energy head
+included), ``cascade`` (vectorized lower-bound prefilter in front of the
+simulator — skips full simulation for candidates the cheap bound already
+rules out, and prints the per-stage prune counters).
+
   PYTHONPATH=src python scripts/sweep.py --preset paper-use-cases --quick
+  PYTHONPATH=src python scripts/sweep.py --quick --backend cascade
+  PYTHONPATH=src python scripts/sweep.py --quick --backend learned
   PYTHONPATH=src python scripts/sweep.py --preset fig8-latency --space s1_mbv2
   PYTHONPATH=src python scripts/sweep.py --scenarios lat-0.3ms,edge-sku-nano
   PYTHONPATH=src python scripts/sweep.py --quick --store /tmp/s.jsonl
@@ -44,6 +52,14 @@ def build_parser() -> argparse.ArgumentParser:
         "--scenarios", default=None, help="comma-separated scenario/preset names"
     )
     ap.add_argument("--driver", default="joint", choices=sorted(sweep.DRIVERS))
+    ap.add_argument(
+        "--backend",
+        default="analytic",
+        choices=("analytic", "learned", "cascade"),
+        help="hardware cost backend (repro.hw): exact simulator, MLP cost "
+        "model trained on the fly (with an energy head), or the "
+        "lower-bound-then-simulate cascade",
+    )
     ap.add_argument("--space", default="s1_mbv2", choices=sorted(nas.SPACES))
     ap.add_argument(
         "--samples", type=int, default=256, help="search samples per scenario"
@@ -155,6 +171,44 @@ def build_runtime(args):
     )
 
 
+def build_backend(args, runner):
+    """--backend -> a repro.hw CostBackend shared by every scenario engine
+    (None = the default analytic backend)."""
+    if args.backend == "analytic":
+        return None
+    if args.backend == "cascade":
+        from repro.hw import CascadeBackend
+
+        return CascadeBackend(scenarios=tuple(runner.scenarios))
+    # learned: label a dataset with the simulator and train the MLP with the
+    # energy head, so energy-target scenarios run on the learned path too
+    from repro.core import costmodel
+    from repro.hw import LearnedBackend
+
+    n, steps = (1500, 3000) if args.quick else (6000, 10000)
+    print(f"training cost model ({n} samples, {steps} steps)...", flush=True)
+    feats, lat, area, energy = costmodel.generate_dataset(
+        runner.nas_space,
+        runner.has_space,
+        n,
+        seed=args.seed,
+        include_energy=True,
+    )
+    model, metrics = costmodel.train(
+        feats,
+        lat,
+        area,
+        costmodel.CostModelConfig(steps=steps),
+        energy_mj=energy,
+    )
+    print(
+        f"cost model: lat mape {metrics['val_latency_mape']:.1%}, "
+        f"area mape {metrics['val_area_mape']:.1%}, "
+        f"energy mape {metrics['val_energy_mape']:.1%}"
+    )
+    return LearnedBackend(model, runner.nas_space, runner.has_space)
+
+
 def main() -> None:
     args = build_parser().parse_args()
 
@@ -190,12 +244,13 @@ def main() -> None:
         share_cache=not args.no_share,
     )
     runner = sweep.SweepRunner(selected, space, proxy.SurrogateAccuracy(), cfg)
+    cfg.backend = build_backend(args, runner)
     extras = f", store={args.store}" if args.store else ""
     if args.workers:
         extras += f", workers={args.workers}"
     print(
         f"sweep: {len(runner.scenarios)} scenarios × {samples} samples, "
-        f"driver={args.driver}, space={space_name}, "
+        f"driver={args.driver}, backend={args.backend}, space={space_name}, "
         f"shared cache={'on' if cfg.share_cache else 'off'}{extras}"
     )
 
@@ -215,6 +270,14 @@ def main() -> None:
         print()
         print(result.table())
         print(f"wall: {result.wall_s:.1f}s")
+        casc = getattr(cfg.backend, "stats", None)
+        if casc is not None and args.backend == "cascade":
+            print(
+                f"cascade: {casc.refined}/{casc.requested} candidates fully "
+                f"simulated — pruned {casc.pruned} "
+                f"(static {casc.static_invalid}, envelope "
+                f"{casc.envelope_pruned}, dominated {casc.dominance_pruned})"
+            )
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(result.as_dict(), f, indent=1, default=str)
@@ -272,6 +335,7 @@ def run_concurrent(args, runner, runtime, cfg):
         runner.acc_fn,
         cfg.search,
         driver=cfg.driver,
+        backend=cfg.backend,
     )
     report = ex.run(jobs)
     for name, err in report.errors.items():

@@ -1,27 +1,33 @@
-"""The latency/area cost model (paper Sec. 3.5.2, Fig. 6, Table 2).
+"""The latency/area(/energy) cost model (paper Sec. 3.5.2, Fig. 6, Table 2).
 
 A 3-layer MLP (hidden 256, ReLU, dropout 0.1) over the one-hot features of the
-joint (α, h) configuration, with two heads sharing the trunk ("the area
+joint (α, h) configuration, with heads sharing the trunk ("the area
 predictor and latency predictor largely share parameters with only separate
 parameterization in the prediction heads"):
 
-    Loss = MSE(area) + λ · MSE(latency),  λ = 10        (Eq. 7)
+    Loss = MSE(area) + λ · MSE(latency) [+ λ_e · MSE(energy)],  λ = 10  (Eq. 7)
 
-Training data is labelled by the analytical simulator ("labelled data for
-accelerator performance is much cheaper than labelled data for NAS accuracy").
-Targets are log-transformed + standardized internally; reported metrics are
-relative errors in the original units.
+The energy head is optional (train with ``energy_mj=`` labels, same
+log-standardize treatment as the other targets) and is what lets
+energy-target scenarios (Sec. 3.4) run on the learned path instead of the
+full simulator. Training data is labelled by the analytical simulator
+("labelled data for accelerator performance is much cheaper than labelled
+data for NAS accuracy"). Targets are log-transformed + standardized
+internally; reported metrics are relative errors in the original units.
 
-A trained ``CostModel`` satisfies the ``EvaluationEngine`` predictor protocol
-(``predict(feats (N,F)) -> (latency_ms (N,), area_mm2 (N,))``), so it drops
-into the search as ``joint_search(..., predictor=model)`` — the engine then
-skips the cycle model entirely for the latency/area estimate (Sec. 3.5.2's
-"cost model in the loop"). See ``docs/architecture.md``.
+A trained ``CostModel`` satisfies the learned-backend predictor protocol
+(``predict(feats (N,F)) -> (latency_ms (N,), area_mm2 (N,))``, plus
+``predict_all`` when the energy head exists), so it drops into the search
+via ``repro.hw.LearnedBackend`` — ``joint_search(...,
+backend=LearnedBackend(model, nspace, hspace))`` or the legacy
+``predictor=model`` shorthand — and the engine then skips the cycle model
+entirely (Sec. 3.5.2's "cost model in the loop"). See
+``docs/architecture.md``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,10 +46,12 @@ class CostModelConfig:
     batch: int = 128
     steps: int = 20_000
     lam: float = 10.0  # Eq. 7 λ
+    lam_energy: float = 10.0  # energy-head weight (performance-class metric)
     seed: int = 0
 
 
-def init_mlp(rng, in_dim: int, cfg: CostModelConfig) -> dict:
+def init_mlp(rng, in_dim: int, cfg: CostModelConfig,
+             energy: bool = False) -> dict:
     dims = [in_dim] + [cfg.hidden] * cfg.layers
     params = {"layers": [], "head_lat": None, "head_area": None}
     ks = jax.random.split(rng, len(dims) + 2)
@@ -60,10 +68,17 @@ def init_mlp(rng, in_dim: int, cfg: CostModelConfig) -> dict:
         "w": jax.random.normal(ks[-1], (cfg.hidden, 1)) * 0.01,
         "b": jnp.zeros((1,)),
     }
+    if energy:
+        # folded key so latency/area inits are unchanged vs two-head models
+        ke = jax.random.fold_in(ks[-1], 1)
+        params["head_energy"] = {
+            "w": jax.random.normal(ke, (cfg.hidden, 1)) * 0.01,
+            "b": jnp.zeros((1,)),
+        }
     return params
 
 
-def mlp_forward(params, x, *, dropout_rng=None, dropout=0.0):
+def _trunk(params, x, *, dropout_rng=None, dropout=0.0):
     h = x
     for lyr in params["layers"]:
         h = jax.nn.relu(h @ lyr["w"] + lyr["b"])
@@ -71,17 +86,37 @@ def mlp_forward(params, x, *, dropout_rng=None, dropout=0.0):
             dropout_rng, sub = jax.random.split(dropout_rng)
             keep = jax.random.bernoulli(sub, 1 - dropout, h.shape)
             h = jnp.where(keep, h / (1 - dropout), 0.0)
-    lat = (h @ params["head_lat"]["w"] + params["head_lat"]["b"])[:, 0]
-    area = (h @ params["head_area"]["w"] + params["head_area"]["b"])[:, 0]
-    return lat, area
+    return h
+
+
+def _head(params, name, h):
+    return (h @ params[name]["w"] + params[name]["b"])[:, 0]
+
+
+def mlp_forward(params, x, *, dropout_rng=None, dropout=0.0):
+    h = _trunk(params, x, dropout_rng=dropout_rng, dropout=dropout)
+    return _head(params, "head_lat", h), _head(params, "head_area", h)
+
+
+def mlp_forward_all(params, x, *, dropout_rng=None, dropout=0.0):
+    """(latency, area, energy-or-None) normalized head outputs."""
+    h = _trunk(params, x, dropout_rng=dropout_rng, dropout=dropout)
+    energy = (_head(params, "head_energy", h)
+              if params.get("head_energy") is not None else None)
+    return _head(params, "head_lat", h), _head(params, "head_area", h), energy
 
 
 @dataclasses.dataclass
 class CostModel:
     params: dict
-    mu: np.ndarray  # (2,) target means (log space)
+    mu: np.ndarray  # (2,) or (3,) target means (log space; 3rd = energy)
     sigma: np.ndarray
     feature_fn: Callable[[np.ndarray], np.ndarray]
+
+    @property
+    def has_energy(self) -> bool:
+        """Whether the model was trained with the third (energy) head."""
+        return self.params.get("head_energy") is not None
 
     def predict(self, feats: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """feats (N, F) -> (latency_ms (N,), area_mm2 (N,))."""
@@ -90,6 +125,21 @@ class CostModel:
         area = np.exp(np.asarray(area) * self.sigma[1] + self.mu[1])
         return lat, area
 
+    def predict_all(self, feats: np.ndarray) -> dict:
+        """feats (N, F) -> {"latency_ms", "area_mm2", "energy_mj"} arrays
+        (``energy_mj`` is ``None`` without the energy head)."""
+        lat, area, energy = mlp_forward_all(self.params, jnp.asarray(feats))
+        out = {
+            "latency_ms": np.exp(np.asarray(lat) * self.sigma[0] + self.mu[0]),
+            "area_mm2": np.exp(np.asarray(area) * self.sigma[1] + self.mu[1]),
+            "energy_mj": None,
+        }
+        if energy is not None:
+            out["energy_mj"] = np.exp(
+                np.asarray(energy) * self.sigma[2] + self.mu[2]
+            )
+        return out
+
 
 def generate_dataset(
     nas_space: Space,
@@ -97,18 +147,21 @@ def generate_dataset(
     n: int,
     seed: int = 0,
     batch_size: int = 1,
-) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    include_energy: bool = False,
+):
     """Random (α, h) samples labelled by the simulator.
-    Returns (features (N,F), latency_ms (N,), area_mm2 (N,)); invalid configs
-    are resampled (they get reward -1 in the search itself, but the cost model
-    trains on valid points, matching the paper's setup).
+    Returns (features (N,F), latency_ms (N,), area_mm2 (N,)) — plus
+    energy_mj (N,) when ``include_energy`` (the energy-head training
+    labels); invalid configs are resampled (they get reward -1 in the
+    search itself, but the cost model trains on valid points, matching the
+    paper's setup).
 
     Labelling goes through the vectorized ``simulator.simulate_batch`` in
     chunks — this is what keeps "labelling 500k cost-model samples" cheap.
     Candidates are drawn pairwise in the same order as the original
     one-at-a-time loop, so the dataset is unchanged for a given seed."""
     rng = np.random.default_rng(seed)
-    feats, lats, areas = [], [], []
+    feats, lats, areas, energies = [], [], [], []
     while len(feats) < n:
         # capped so a 500k-sample run never materializes all candidate
         # matrices at once (peak memory stays bounded); floored so the tail
@@ -126,8 +179,12 @@ def generate_dataset(
                                          has_space.features(hv)]))
             lats.append(res["latency_ms"])
             areas.append(res["area_mm2"])
+            energies.append(res["energy_mj"])
             if len(feats) == n:
                 break
+    if include_energy:
+        return (np.stack(feats), np.array(lats), np.array(areas),
+                np.array(energies))
     return np.stack(feats), np.array(lats), np.array(areas)
 
 
@@ -137,13 +194,21 @@ def train(
     area_mm2: np.ndarray,
     cfg: CostModelConfig = CostModelConfig(),
     val_frac: float = 0.1,
+    energy_mj: Optional[np.ndarray] = None,
 ) -> tuple[CostModel, dict]:
+    """Passing ``energy_mj`` labels adds the third (energy) head on the
+    shared trunk with the same log-standardize treatment; without them the
+    training run is unchanged down to the RNG stream (two-head models stay
+    reproducible)."""
     n, fdim = feats.shape
     n_val = max(1, int(n * val_frac))
     idx = np.random.default_rng(cfg.seed).permutation(n)
     tr, va = idx[n_val:], idx[:n_val]
 
-    y = np.stack([np.log(lat_ms), np.log(area_mm2)], axis=1)
+    cols = [np.log(lat_ms), np.log(area_mm2)]
+    if energy_mj is not None:
+        cols.append(np.log(energy_mj))
+    y = np.stack(cols, axis=1)
     mu = y[tr].mean(0)
     sigma = y[tr].std(0) + 1e-8
     yn = (y - mu) / sigma
@@ -153,16 +218,20 @@ def train(
     x_va = jnp.asarray(feats[va])
 
     rng = jax.random.PRNGKey(cfg.seed)
-    params = init_mlp(rng, fdim, cfg)
+    params = init_mlp(rng, fdim, cfg, energy=energy_mj is not None)
     opt = {"m": jax.tree.map(jnp.zeros_like, params),
            "v": jax.tree.map(jnp.zeros_like, params)}
 
     def loss_fn(p, xb, yb, drng):
-        lat, area = mlp_forward(p, xb, dropout_rng=drng, dropout=cfg.dropout)
-        # Eq. 7: MSE(area) + λ MSE(latency)
-        return jnp.mean((area - yb[:, 1]) ** 2) + cfg.lam * jnp.mean(
+        lat, area, energy = mlp_forward_all(p, xb, dropout_rng=drng,
+                                            dropout=cfg.dropout)
+        # Eq. 7: MSE(area) + λ MSE(latency) [+ λ_e MSE(energy)]
+        loss = jnp.mean((area - yb[:, 1]) ** 2) + cfg.lam * jnp.mean(
             (lat - yb[:, 0]) ** 2
         )
+        if energy is not None:
+            loss = loss + cfg.lam_energy * jnp.mean((energy - yb[:, 2]) ** 2)
+        return loss
 
     @jax.jit
     def step(p, o, xb, yb, drng, t):
@@ -185,7 +254,7 @@ def train(
         params, opt, loss = step(params, opt, x_tr[bi], y_tr[bi], drng,
                                  jnp.float32(t))
 
-    lat_p, area_p = mlp_forward(params, x_va)
+    lat_p, area_p, energy_p = mlp_forward_all(params, x_va)
     lat_pred = np.exp(np.asarray(lat_p) * sigma[0] + mu[0])
     area_pred = np.exp(np.asarray(area_p) * sigma[1] + mu[1])
     lat_true = lat_ms[va]
@@ -201,5 +270,10 @@ def train(
         "n_train": int(n_tr),
         "n_val": int(n_val),
     }
+    if energy_p is not None:
+        energy_pred = np.exp(np.asarray(energy_p) * sigma[2] + mu[2])
+        energy_true = energy_mj[va]
+        metrics["val_energy_mape"] = float(
+            np.mean(np.abs(energy_pred - energy_true) / energy_true))
     model = CostModel(params=params, mu=mu, sigma=sigma, feature_fn=lambda f: f)
     return model, metrics

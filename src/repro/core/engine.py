@@ -15,14 +15,20 @@ Modes (inferred from the constructor arguments):
   * has-only  — ``has_space`` + ``fixed_spec``/``fixed_acc``: vec = h
                 (phase 1 of phase_search)
 
-Backends:
-  * the analytical simulator (default) — exact, still cheap;
-  * any ``predictor`` object with ``predict(feats (N,F)) -> (latency_ms (N,),
-    area_mm2 (N,))`` — e.g. the learned cost model (``costmodel.CostModel``) —
-    as a drop-in replacement for the simulator (paper Sec. 3.5.2). The
-    predictor path still applies the simulator's *static* validity rules
-    (register file / memory / streaming / PE aspect), but not the io-starvation
-    rule, which needs the full cycle model.
+Backends (``repro.hw`` — the unified ``CostBackend`` protocol):
+  * ``AnalyticBackend`` (default) — the exact analytical simulator
+    (``simulator.simulate_batch``);
+  * ``LearnedBackend`` — the MLP cost model (paper Sec. 3.5.2's "cost model
+    in the loop"), optionally with an energy head so energy-target
+    scenarios run learned too; the legacy ``predictor=`` kwarg is a thin
+    deprecation shim that wraps the object in a ``LearnedBackend``;
+  * ``CascadeBackend`` — multi-fidelity: a vectorized lower-bound prefilter
+    rejects infeasible-or-dominated candidates before the expensive
+    backend runs.
+Pass ``backend=`` to substitute any of them (or your own implementation of
+the protocol). The engine validates the objective against
+``backend.metrics`` — an energy-target ``RewardConfig`` needs a backend
+that serves ``energy_mj``.
 
 ``CallableEngine`` wraps an arbitrary per-candidate evaluation function with
 the same batch + cache interface (used by ``repro.core.meshsearch``).
@@ -37,7 +43,7 @@ between many engines (the scenario sweep, ``repro.core.sweep``, runs N
 scenarios over one store and reports the cross-scenario hit rate).
 
 See ``docs/architecture.md`` for the full picture and a worked example of
-plugging in a custom predictor backend.
+plugging in a custom cost backend.
 """
 from __future__ import annotations
 
@@ -50,6 +56,8 @@ import numpy as np
 
 from repro.core import simulator
 from repro.core.proxy import CachedAccuracy
+from repro.hw.analytic import ANALYTIC, AnalyticBackend
+from repro.hw.learned import LearnedBackend
 from repro.core.reward import (
     RewardConfig,
     meets_constraints as meets_fn,
@@ -98,13 +106,14 @@ def split_key(key: bytes) -> tuple[bytes, tuple[int, ...]]:
 
 def _identity_token(obj) -> object:
     """Stable identity of a namespace-relevant object (accuracy signal,
-    predictor). Content-based when possible — an object may publish a
-    ``cache_key`` attribute/method, and plain-scalar-field dataclasses
-    (``SurrogateAccuracy``, ``TrainedAccuracy``) use their repr — so the
-    namespace survives process restarts, which is what lets a
-    ``repro.runtime.DurableRecordStore`` rehydrate at full hit rate.
-    Falls back to ``id()`` for stateful objects (e.g. a trained CostModel):
-    those namespaces are process-local, guarded against address reuse by
+    cost backend). Content-based when possible — an object may publish a
+    ``cache_key`` attribute/method (every ``repro.hw`` backend does), and
+    plain-scalar-field dataclasses (``SurrogateAccuracy``,
+    ``TrainedAccuracy``) use their repr — so the namespace survives process
+    restarts, which is what lets a ``repro.runtime.DurableRecordStore``
+    rehydrate at full hit rate. Falls back to ``id()`` for stateful objects
+    (e.g. a ``LearnedBackend`` over a freshly trained CostModel): those
+    namespaces are process-local, guarded against address reuse by
     ``RecordStore.pin``."""
     if obj is None:
         return None
@@ -172,7 +181,7 @@ class RecordStore:
 
     def pin(self, *objs) -> None:
         """Keep strong references to the objects whose identity an engine's
-        namespace hashes (accuracy signal, predictor). Engines pin on
+        namespace hashes (accuracy signal, cost backend). Engines pin on
         construction so a store that outlives its engines can never serve a
         record under a recycled ``id()`` belonging to a different signal."""
         self._pins.extend(o for o in objs if o is not None)
@@ -227,6 +236,7 @@ class EvaluationEngine:
         constraint_mode: str = "full",  # "full" | "area_only" (phase-1 HAS)
         proxy_batch: int = 1,
         predictor=None,
+        backend=None,
         cache: bool = True,
         max_cache_entries: int = 1_000_000,
         store: Optional[RecordStore] = None,
@@ -249,14 +259,26 @@ class EvaluationEngine:
         if self.mode != "has" and acc_fn is None:
             raise ValueError("joint / nas-only modes need an accuracy signal")
         if predictor is not None:
+            # deprecation shim: predictor= is the pre-backend spelling of the
+            # learned path; it becomes a LearnedBackend over the same object
+            if backend is not None:
+                raise ValueError("pass either backend= or the legacy "
+                                 "predictor=, not both")
             if self.mode != "joint":
                 raise ValueError("predictor backend requires joint mode "
                                  "(it is trained on joint (α, h) features)")
-            if rcfg.energy_target_mj is not None:
-                raise ValueError("predictor backend predicts latency/area "
-                                 "only; use a latency-target RewardConfig")
-        if (cache or store is not None) and acc_fn is not None and \
-                not isinstance(acc_fn, CachedAccuracy):
+            backend = LearnedBackend(predictor, nas_space, has_space)
+        self.backend = backend if backend is not None else ANALYTIC
+        self.predictor = predictor  # legacy surface (None unless shimmed)
+        if getattr(self.backend, "joint_only", False) and self.mode != "joint":
+            raise ValueError(
+                f"backend {self.backend.name!r} requires joint mode "
+                f"(it featurizes joint (α, h) vectors); this engine is "
+                f"{self.mode}-mode")
+        self._require_metrics(rcfg)
+        wants_acc = getattr(self.backend, "wants_accuracy", False)
+        if (cache or store is not None or wants_acc) and acc_fn is not None \
+                and not isinstance(acc_fn, CachedAccuracy):
             # collapses distinct vectors that alias to one architecture; the
             # signals are deterministic per spec, so records are unchanged
             acc_fn = CachedAccuracy(acc_fn)
@@ -269,7 +291,6 @@ class EvaluationEngine:
         self.fixed_acc = fixed_acc
         self.constraint_mode = constraint_mode
         self.proxy_batch = proxy_batch
-        self.predictor = predictor
         self.max_cache_entries = max_cache_entries
         # one memo implementation for both flavors: a shared store passed in,
         # or a private RecordStore when plain cache=True
@@ -282,7 +303,7 @@ class EvaluationEngine:
             # must outlive every object whose identity it distinguishes
             acc = self.acc_fn
             self.store.pin(acc.fn if isinstance(acc, CachedAccuracy) else acc,
-                           predictor)
+                           self.backend, getattr(self.backend, "model", None))
         self._ns = self._namespace()
         # short stable identity of the frozen architecture (has mode) —
         # drivers stamp it on history records so has-mode vecs from different
@@ -293,6 +314,28 @@ class EvaluationEngine:
                 repr(fixed_spec).encode()).hexdigest()[:12]
         self.stats = EngineStats()
 
+    def _require_metrics(self, rcfg: RewardConfig) -> None:
+        """An objective may only target metrics the backend certifies."""
+        if rcfg.energy_target_mj is not None and \
+                "energy_mj" not in self.backend.metrics:
+            raise ValueError(
+                f"backend {self.backend.name!r} serves {self.backend.metrics}"
+                f" — an energy-target RewardConfig needs 'energy_mj' (train "
+                f"the cost model with an energy head, or use the analytic "
+                f"backend)"
+            )
+
+    def _backend_token(self):
+        """The backend's namespace contribution. The stateless analytic
+        backend maps to ``None`` — the pre-backend default — so stores
+        written before the backend layer existed (and engines built without
+        ``backend=``) keep resolving to the same namespaces. Exact type
+        check: a *subclass* of AnalyticBackend may estimate differently and
+        must not share the default namespace."""
+        if type(self.backend) is AnalyticBackend:
+            return None
+        return _identity_token(self.backend)
+
     def _namespace(self) -> bytes:
         """Key prefix isolating this engine's raw records inside a shared
         ``RecordStore``: engines whose *metrics* could differ for the same
@@ -300,9 +343,10 @@ class EvaluationEngine:
         signal) must not collide. Objective (rcfg/constraint_mode) is
         deliberately absent — raw records are objective-independent, and
         cross-objective reuse is the point of sharing a store. Identity of
-        the accuracy signal / predictor is content-based where possible
-        (``_identity_token``) so the namespace — and therefore a durable
-        store's hit rate — survives process restarts."""
+        the accuracy signal / backend is content-based where possible
+        (``_identity_token``; backends publish ``cache_key``) so the
+        namespace — and therefore a durable store's hit rate — survives
+        process restarts."""
         acc = self.acc_fn
         if isinstance(acc, CachedAccuracy):
             acc = acc.fn
@@ -313,7 +357,7 @@ class EvaluationEngine:
             repr(self.fixed_spec),
             self.fixed_acc,
             _identity_token(acc),
-            _identity_token(self.predictor),
+            self._backend_token(),
         ))
         return hashlib.sha1(ident.encode()).digest()
 
@@ -366,11 +410,12 @@ class EvaluationEngine:
         (``simulator.simulate_safe`` one candidate at a time, no caching).
         For simulator-backed engines ``evaluate_batch`` must match this
         bitwise — the engine tests and the engine micro-benchmark both
-        enforce/report it. Predictor-backed engines have no looped
-        equivalent (this raises)."""
-        if self.predictor is not None:
+        enforce/report it. Non-exact backends (learned, cascade) have no
+        looped equivalent (this raises)."""
+        if not self.backend.exact:
             raise ValueError("evaluate_looped is the simulator reference "
-                             "path; this engine uses a predictor backend")
+                             f"path; this engine uses the non-exact "
+                             f"{self.backend.name!r} backend")
         out = []
         for vec in np.asarray(vecs):
             spec, h = self._decode(vec)
@@ -405,9 +450,7 @@ class EvaluationEngine:
         the store attribution label) without touching the memo: cached raw
         metrics re-score under the new objective on their next lookup, so
         switching scenarios never re-simulates. Returns self for chaining."""
-        if self.predictor is not None and rcfg.energy_target_mj is not None:
-            raise ValueError("predictor backend predicts latency/area only; "
-                             "use a latency-target RewardConfig")
+        self._require_metrics(rcfg)
         self.rcfg = rcfg
         if constraint_mode is not None:
             self.constraint_mode = constraint_mode
@@ -503,34 +546,23 @@ class EvaluationEngine:
         self.stats.evaluated += len(vecs)
         V = np.asarray(vecs)
         specs, hs = self._decode_batch(V)
-        if self.predictor is not None:
-            sims = self._predict(vecs, specs, hs)
-        else:
-            sims = simulator.simulate_batch(specs, hs, batch=self.proxy_batch)
+        accs = None
+        if getattr(self.backend, "wants_accuracy", False):
+            # lazy per-index accessor: the cascade's dominance prefilter
+            # needs accuracy only for candidates that survive its cheaper
+            # stages, so the signal is evaluated on demand — and the engine
+            # wraps acc_fn in CachedAccuracy whenever a backend wants
+            # accuracy, so _raw re-reads stay free
+            if self.mode == "has":
+                accs = lambda i: float(self.fixed_acc)
+            else:
+                accs = lambda i: float(self.acc_fn(specs[i]))
+        hm = self.backend.estimate_batch(
+            specs, hs, batch=self.proxy_batch, vecs=V, accs=accs
+        )
+        sims = hm.records
         self.stats.invalid += sum(1 for s in sims if s is None)
         return [self._raw(sim, spec) for sim, spec in zip(sims, specs)]
-
-    def _predict(self, vecs: list, specs: list, hs: list) -> list:
-        """Cost-model backend: static validity via the simulator's rules, then
-        latency/area from ``predictor.predict`` on the joint one-hot features
-        (the exact featurization ``costmodel.generate_dataset`` trains on)."""
-        na = self.nas_space.num_decisions
-        feats = np.stack([
-            np.concatenate([self.nas_space.features(v[:na]),
-                            self.has_space.features(v[na:])])
-            for v in vecs
-        ])
-        lat, area = self.predictor.predict(feats)
-        sims: list = []
-        for i, (spec, h) in enumerate(zip(specs, hs)):
-            if simulator.validate(h, simulator.model_weight_bytes(spec)):
-                sims.append(None)
-                continue
-            sims.append({
-                "latency_ms": float(lat[i]), "area_mm2": float(area[i]),
-                "energy_mj": None, "utilization": None, "predicted": True,
-            })
-        return sims
 
 
 class CallableEngine:

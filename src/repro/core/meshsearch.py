@@ -15,6 +15,10 @@ Mapping from the paper (DESIGN.md §2):
 
 The analytical model is a deliberately simple Megatron-style napkin model —
 it exists to RANK configurations; absolute numbers come from the dry-run.
+It lives behind the unified hardware cost-backend protocol
+(``repro.hw.roofline.PodRooflineBackend``), so this module no longer
+imports the roofline internals directly; ``PodCostModel`` is kept as a
+compatibility alias for the backend class.
 
 ``search_mesh`` evaluates candidates through a ``CallableEngine``
 (repro.core.engine): the pod space is small enough that a converging PPO
@@ -24,7 +28,6 @@ content-addressed cache serves those repeats for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 
@@ -32,7 +35,11 @@ from repro.config import ModelConfig, ShapeConfig
 from repro.core.controllers import PPOController
 from repro.core.engine import CallableEngine
 from repro.core.space import Choice, Space
-from repro.launch.hwspecs import V5E, ChipSpec
+from repro.hw.roofline import PodRooflineBackend
+
+# compatibility alias: the pod napkin model moved behind the cost-backend
+# protocol (same constructor and .evaluate surface)
+PodCostModel = PodRooflineBackend
 
 
 # the production default (the §Perf baseline config)
@@ -60,88 +67,6 @@ def mesh_space(chips: int = 256) -> Space:
 
 
 @dataclasses.dataclass
-class PodCostModel:
-    cfg: ModelConfig
-    shape: ShapeConfig
-    chip: ChipSpec = V5E
-    chips: int = 256
-
-    def _param_count(self) -> tuple[float, float]:
-        """(total params, active params)."""
-        from repro.launch.roofline import count_params
-
-        c = count_params(self.cfg)
-        total = c["total"]
-        active = total
-        if self.cfg.family == "moe" and self.cfg.num_experts:
-            frac = self.cfg.num_experts_per_tok / self.cfg.num_experts
-            active = total - c["expert"] + c["expert"] * frac
-        return float(total), float(active)
-
-    def evaluate(self, h: dict) -> Optional[dict]:
-        cfg, shape, chip = self.cfg, self.shape, self.chip
-        dsz, msz = h["mesh"]
-        k = h["microbatches"]
-        tokens = shape.global_batch * shape.seq_len
-        if shape.global_batch % (dsz * k) and shape.global_batch >= dsz * k:
-            return None  # microbatch split must divide the per-data batch
-        if shape.global_batch < dsz and shape.global_batch != 1:
-            return None
-        total_p, active_p = self._param_count()
-
-        # ---- memory check (bytes/chip) ----
-        p_local = total_p * 4 / min(self.chips, msz * (dsz if h["fsdp"] else 1))
-        opt_local = 2 * p_local
-        tok_local = tokens / max(dsz, 1) / k
-        act_per_layer = tok_local * cfg.d_model * 2
-        n_live = {"none": cfg.num_layers, "dots": cfg.num_layers / 2,
-                  "full": 1}[h["remat"]] if shape.mode == "train" else 1
-        act_bytes = act_per_layer * max(n_live, 1) * 8
-        hbm = p_local + opt_local + act_bytes + act_per_layer * cfg.num_layers
-        if hbm > chip.hbm_bytes * 0.9:
-            return None
-
-        # ---- compute term ----
-        mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[shape.mode]
-        if shape.mode == "train" and h["remat"] == "full":
-            mult = 8.0
-        elif shape.mode == "train" and h["remat"] == "dots":
-            mult = 7.0
-        eff_tokens = tokens if shape.mode != "decode" else shape.global_batch
-        flops = mult * active_p * eff_tokens / self.chips
-        compute_s = flops / chip.peak_bf16_flops
-
-        # ---- memory term ----
-        reads = 3.0 if shape.mode == "train" else 1.0
-        mem_bytes = p_local * reads * (k if h["fsdp"] else 1) + act_bytes * 4
-        memory_s = mem_bytes / chip.hbm_bw
-
-        # ---- collective term (per chip wire bytes) ----
-        act_msg = tok_local * cfg.d_model * 2  # bf16
-        n_coll_layers = cfg.num_layers * (2 if shape.mode != "train" else 6)
-        ar = 2 * (msz - 1) / msz if msz > 1 else 0.0
-        if h["act_collective"] == "seqpar":
-            ar *= 0.5  # reduce-scatter + all-gather instead of all-reduce
-        wire = act_msg * n_coll_layers * ar * k
-        if h["fsdp"] and dsz > 1:
-            wire += total_p * 2 / msz * (dsz - 1) / dsz * k  # bf16 weight gathers
-        if shape.mode == "train" and dsz > 1:
-            gb = 4.0 if h["grad_dtype"] == "float32" else 2.0
-            wire += total_p * gb / msz * 2 * (dsz - 1) / dsz  # grad all-reduce
-        collective_s = wire / chip.ici_link_bw
-
-        step = max(compute_s, memory_s, collective_s)
-        return {
-            "compute_s": compute_s, "memory_s": memory_s,
-            "collective_s": collective_s, "step_s": step,
-            "hbm_bytes": hbm, "valid": True,
-            "mfu": (mult if shape.mode != "train" else 6.0)
-            * active_p * eff_tokens / self.chips / max(step, 1e-12)
-            / chip.peak_bf16_flops,
-        }
-
-
-@dataclasses.dataclass
 class MeshSearchResult:
     best: dict
     best_cfg: dict
@@ -156,12 +81,12 @@ def search_mesh(
     seed: int = 0,
 ) -> MeshSearchResult:
     space = mesh_space(chips)
-    model = PodCostModel(cfg, shape, chips=chips)
+    backend = PodRooflineBackend(cfg, shape, chips=chips)
     ctrl = PPOController(space, seed=seed)
 
     def eval_one(vec: np.ndarray) -> dict:
         hcfg = space.to_dict(vec)
-        res = model.evaluate(hcfg)
+        res = backend.estimate_batch([None], [hcfg]).records[0]
         if res is None:
             return {"valid": False, "reward": -1.0, "config": hcfg}
         # minimize step time

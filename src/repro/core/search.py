@@ -15,9 +15,9 @@ All four drivers evaluate candidates through a
 simulated in one vectorized pass (``simulator.simulate_batch``) and finished
 records are memoized content-addressed on the encoded (α, h) vector, so
 repeated samples — common under PPO late in search — cost nothing. Pass
-``engine=`` to a driver to substitute a custom backend (e.g. the learned cost
-model via ``EvaluationEngine(..., predictor=cost_model)``); see
-``docs/architecture.md``.
+``backend=`` to substitute a hardware cost backend from ``repro.hw``
+(analytic / learned / cascade, or any ``CostBackend``), or ``engine=`` for
+a fully custom engine; see ``docs/architecture.md``.
 
 Every driver returns a ``SearchResult`` whose ``history`` carries one record
 per evaluated sample (accuracy, latency, energy, area, reward, validity, the
@@ -264,6 +264,7 @@ def joint_search(
     has_space: Optional[Space] = None,
     engine: Optional[EvaluationEngine] = None,
     predictor=None,
+    backend=None,
     scenario: Optional[Scenario] = None,
     runtime=None,
     checkpoint_dir: Optional[str] = None,
@@ -273,13 +274,14 @@ def joint_search(
     runtime = _as_runtime(runtime, checkpoint_dir)
     has_space = has_space or has_lib.has_space()
     joint = concat(nas_space, has_space)
-    if engine is not None and predictor is not None:
-        raise ValueError("pass either engine= or predictor=, not both — "
-                         "a prebuilt engine already fixes its backend")
+    if engine is not None and (predictor is not None or backend is not None):
+        raise ValueError("pass either engine= or predictor=/backend=, not "
+                         "both — a prebuilt engine already fixes its backend")
     if engine is None:
         engine = EvaluationEngine(
             nas_space, has_space, acc_fn, rcfg,
             proxy_batch=cfg.proxy_batch, cache=cfg.cache, predictor=predictor,
+            backend=backend,
             store=_runtime_store(cfg, runtime),
             label=None if scenario is None else scenario.name,
         )
@@ -298,6 +300,7 @@ def fixed_hw_search(
     cfg: SearchConfig = SearchConfig(),
     h=None,
     engine: Optional[EvaluationEngine] = None,
+    backend=None,
     scenario: Optional[Scenario] = None,
     runtime=None,
     checkpoint_dir: Optional[str] = None,
@@ -306,9 +309,12 @@ def fixed_hw_search(
     rcfg = _objective(rcfg, scenario)
     runtime = _as_runtime(runtime, checkpoint_dir)
     h = h or has_lib.BASELINE
+    if engine is not None and backend is not None:
+        raise ValueError("pass either engine= or backend=, not both — "
+                         "a prebuilt engine already fixes its backend")
     if engine is None:
         engine = EvaluationEngine(
-            nas_space, None, acc_fn, rcfg, fixed_h=h,
+            nas_space, None, acc_fn, rcfg, fixed_h=h, backend=backend,
             proxy_batch=cfg.proxy_batch, cache=cfg.cache,
             store=_runtime_store(cfg, runtime),
             label=None if scenario is None else scenario.name,
@@ -323,6 +329,7 @@ def phase_search(
     rcfg: Optional[RewardConfig] = None,
     cfg: SearchConfig = SearchConfig(),
     initial_arch_vec: Optional[np.ndarray] = None,
+    backend=None,
     scenario: Optional[Scenario] = None,
     runtime=None,
     checkpoint_dir: Optional[str] = None,
@@ -346,7 +353,8 @@ def phase_search(
     h_engine = EvaluationEngine(
         None, hspace, None, soft, fixed_spec=spec0, fixed_acc=acc0,
         constraint_mode="area_only", proxy_batch=cfg.proxy_batch,
-        cache=cfg.cache, store=_runtime_store(cfg, runtime),
+        cache=cfg.cache, backend=backend,
+        store=_runtime_store(cfg, runtime),
         label=None if scenario is None else scenario.name,
     )
     half = dataclasses.replace(cfg, samples=cfg.samples // 2)
@@ -357,7 +365,8 @@ def phase_search(
     phase2 = fixed_hw_search(
         nas_space, acc_fn, rcfg,
         dataclasses.replace(cfg, samples=cfg.samples - half.samples),
-        h=h_best, scenario=scenario, runtime=runtime, tag=f"{tag}.nas",
+        h=h_best, backend=backend, scenario=scenario, runtime=runtime,
+        tag=f"{tag}.nas",
     )
     history = phase1.history + phase2.history
     return SearchResult(phase2.best_vec, phase2.best_record, history,
@@ -372,6 +381,7 @@ def nested_search(
     rcfg: Optional[RewardConfig] = None,
     cfg: SearchConfig = SearchConfig(),
     outer: int = 8,
+    backend=None,
     scenario: Optional[Scenario] = None,
     runtime=None,
     checkpoint_dir: Optional[str] = None,
@@ -396,7 +406,8 @@ def nested_search(
         res = fixed_hw_search(
             nas_space, acc_fn, rcfg,
             dataclasses.replace(cfg, samples=inner_budget, seed=cfg.seed + o),
-            h=h, scenario=scenario, runtime=runtime, tag=f"{tag}.outer{o}",
+            h=h, backend=backend, scenario=scenario, runtime=runtime,
+            tag=f"{tag}.outer{o}",
         )
         history.extend(res.history)
         for key, v in res.engine_stats.items():  # aggregate over inner runs

@@ -286,6 +286,124 @@ def model_weight_bytes(spec: ConvNetSpec) -> float:
     return float(wb.sum())
 
 
+# ---------------------------------------------------------------------------
+# Cheap lower bounds (the cascade backend's prefilter stage)
+# ---------------------------------------------------------------------------
+# Per-spec scalars reduce the (9, L) layer matrix to four numbers, so a batch
+# of N candidates is bounded with O(N) vector arithmetic instead of the full
+# O(N·L) candidates × layers pass. Every bound is a TRUE lower bound of the
+# corresponding ``simulate`` output (each term drops only nonnegative
+# contributions: ceil-tiling slack, per-layer max vs sum-of-max, weight
+# re-streaming passes, per-layer activation spill vs aggregate spill), so a
+# candidate whose bound already violates a cap is guaranteed infeasible.
+_BOUND_CACHE: dict = {}
+
+
+def bound_scalars(spec: ConvNetSpec) -> tuple:
+    """(macs@batch1, weight_bytes, act_bytes@batch1, num_layers) for ``spec``
+    (cached; the aggregate inputs of ``lower_bounds``)."""
+    s = _BOUND_CACHE.get(spec)
+    if s is not None:
+        return s
+    m = layer_matrix(spec)
+    is_dw = m[0] != 0.0
+    h_, w_, cin, cout, k, grp, out_hw = m[1], m[2], m[3], m[4], m[5], m[7], m[8]
+    k2 = k**2
+    macs = float(np.where(is_dw, out_hw * cout * k2,
+                          out_hw * cout * k2 * cin / grp).sum())
+    wb = float(np.where(is_dw, k2 * cout,
+                        k2 * np.floor_divide(cin, grp) * cout).sum())
+    act = float((h_ * w_ * cin + out_hw * cout).sum())
+    s = (macs, wb, act, m.shape[1])
+    if len(_BOUND_CACHE) > 65536:
+        _BOUND_CACHE.clear()
+    _BOUND_CACHE[spec] = s
+    return s
+
+
+# relative safety margin: the aggregate bounds above are exact in real
+# arithmetic; this absorbs float reassociation so a bound can never exceed
+# the simulator's value by rounding alone
+_BOUND_SLACK = 1.0 - 1e-9
+
+
+def lower_bounds(specs: list, hs: list, batch: int = 1) -> dict:
+    """Vectorized per-candidate lower bounds + static validity.
+
+    Returns ``{"invalid": bool (N,), "latency_ms": (N,), "energy_mj": (N,),
+    "area_mm2": (N,)}``. ``invalid`` mirrors ``validate()`` exactly (the
+    static rules; io starvation needs the full model and is not checked).
+    ``area_mm2`` is exact; latency/energy are guaranteed lower bounds of the
+    ``simulate`` outputs for every candidate, valid or not.
+    """
+    n = len(specs)
+    hw = np.array(
+        [(h.pes_x, h.pes_y, h.simd_units, h.compute_lanes, h.simd_width,
+          h.register_file_kb, h.io_bandwidth_gbps, h.frequency_ghz,
+          h.local_memory_mb)
+         for h in hs],
+        np.float64,
+    ).reshape(n, 9)
+    sb = np.array([bound_scalars(s) for s in specs], np.float64).reshape(n, 4)
+    macs = sb[:, 0] * batch
+    wsum = sb[:, 1]
+    act = sb[:, 2] * batch
+    layers = sb[:, 3]
+
+    pes_x, pes_y = hw[:, 0], hw[:, 1]
+    simd_units, lanes_per_pe, simd_width = hw[:, 2], hw[:, 3], hw[:, 4]
+    rf_kb, io_gbps = hw[:, 5], hw[:, 6]
+    freq, local_mb = hw[:, 7], hw[:, 8]
+    num_pes = pes_x * pes_y
+    lanes = num_pes * lanes_per_pe
+    local = num_pes * local_mb * 2**20
+    io_bpc = io_gbps / freq
+
+    area = (
+        _AREA["base"]
+        + num_pes * _AREA["pe_base"]
+        + lanes * _AREA["lane"]
+        + lanes * simd_units * _AREA["simd_unit"]
+        + lanes * rf_kb * _AREA["rf_per_kb"]
+        + num_pes * local_mb * _AREA["mem_per_mb"]
+        + io_gbps * _AREA["io_per_gbps"]
+    )
+
+    rf_needed_kb = simd_units * simd_width * 6 / 1024
+    invalid = (
+        (rf_kb < rf_needed_kb)
+        | (local < 128 * 1024)
+        | ((wsum > 8 * local) & (io_gbps < 10))
+        | (np.maximum(pes_x, pes_y) / np.minimum(pes_x, pes_y) > 4)
+    )
+
+    # compute: ideal peak utilization (every ceil rounds down to its argument)
+    compute_lb = macs / (lanes * simd_units * simd_width)
+    # io: weights stream at least once when not resident; per-layer spill sums
+    # to at least the aggregate spill
+    w_stream_lb = np.where(wsum <= 0.75 * local, 0.0, wsum)
+    act_spill_lb = np.maximum(0.0, act - 0.5 * local * layers)
+    dram_lb = w_stream_lb + act_spill_lb
+    io_lb = dram_lb / io_bpc
+    cycles_lb = np.maximum(compute_lb / _PIPELINE_EFF, io_lb) \
+        + layers * _OP_OVERHEAD_CYCLES
+    lat_s_lb = cycles_lb / (freq * 1e9) * _BOUND_SLACK
+
+    dyn_lb = (
+        macs * _MAC_PJ * 1e-12
+        + dram_lb * _DRAM_PJ_PER_BYTE * 1e-12
+        + act * _SRAM_PJ_PER_BYTE * 1e-12
+    )
+    energy_lb = (dyn_lb + _LEAKAGE_W_PER_MM2 * area * lat_s_lb) * _BOUND_SLACK
+
+    return {
+        "invalid": invalid,
+        "latency_ms": lat_s_lb * 1e3,
+        "energy_mj": energy_lb * 1e3,
+        "area_mm2": area,
+    }
+
+
 def simulate_batch(
     specs: list,
     hs: list,

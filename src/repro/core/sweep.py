@@ -57,6 +57,11 @@ class SweepConfig:
     # with private caches — the ablation `benchmarks/sweep_bench.py` reports)
     share_cache: bool = True
     objectives: tuple = DEFAULT_OBJECTIVES
+    # hardware cost backend shared by every scenario's engine (repro.hw:
+    # analytic when None, or a LearnedBackend / CascadeBackend instance —
+    # sharing one instance is what aligns the store namespaces and, for the
+    # cascade, pools the dominance incumbents across scenarios)
+    backend: Optional[object] = None
     # shorthand for a checkpoint-only runtime: per-scenario searches then
     # checkpoint every batch and the sweep resumes mid-scenario (see
     # repro.runtime; an explicit runtime passed to run() wins)
@@ -254,7 +259,13 @@ class SweepRunner:
                     f"({cfg.driver}, {scfg.samples} samples)",
                     flush=True,
                 )
-            kw = dict(cfg=scfg, scenario=sc, runtime=runtime, tag=f"sweep.{sc.name}")
+            kw = dict(
+                cfg=scfg,
+                backend=cfg.backend,
+                scenario=sc,
+                runtime=runtime,
+                tag=f"sweep.{sc.name}",
+            )
             if cfg.driver == "joint":
                 res = driver(
                     self.nas_space, self.acc_fn, has_space=self.has_space, **kw

@@ -1,0 +1,27 @@
+"""Unified hardware cost backends (the ``CostBackend`` protocol).
+
+One interface — ``estimate_batch(specs, hs, ...) -> HwMetrics`` — over
+every hardware cost signal in the repo: the exact analytical simulator
+(``AnalyticBackend``), the learned MLP cost model (``LearnedBackend``),
+and the multi-fidelity cheap-filter-then-refine cascade
+(``CascadeBackend``). The pod-level roofline adapter
+(``repro.hw.roofline.PodRooflineBackend``) lives in its own module to keep
+this package import-light for the core search stack.
+
+See ``docs/architecture.md`` ("Hardware cost backends") for the protocol,
+the fidelity/namespacing contract, and the cascade design.
+"""
+from repro.hw.analytic import ANALYTIC, AnalyticBackend
+from repro.hw.backend import CostBackend, HwMetrics
+from repro.hw.cascade import CascadeBackend, CascadeStats
+from repro.hw.learned import LearnedBackend
+
+__all__ = [
+    "ANALYTIC",
+    "AnalyticBackend",
+    "CascadeBackend",
+    "CascadeStats",
+    "CostBackend",
+    "HwMetrics",
+    "LearnedBackend",
+]

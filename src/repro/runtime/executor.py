@@ -225,6 +225,7 @@ def scenario_jobs(
     acc_fn,
     cfg=None,
     driver: str = "joint",
+    backend=None,
 ) -> list[SearchJob]:
     """One ``SearchJob`` per scenario over one driver — the concurrent
     counterpart of ``sweep.SweepRunner`` (same tags, so the two are
@@ -246,7 +247,13 @@ def scenario_jobs(
         SearchJob(
             name=f"sweep.{sc.name}",
             fn=sweep_lib.DRIVERS[driver],
-            kwargs=dict(nas_space=nas_space, acc_fn=acc_fn, cfg=cfg, scenario=sc),
+            kwargs=dict(
+                nas_space=nas_space,
+                acc_fn=acc_fn,
+                cfg=cfg,
+                backend=backend,
+                scenario=sc,
+            ),
         )
         for sc in scenarios_lib.expand(scenarios)
     ]

@@ -1,0 +1,385 @@
+"""The unified hardware cost-backend layer (repro.hw): protocol surfaces,
+namespace compatibility of the analytic default, lower-bound soundness, and
+the cascade's best-config agreement with the full analytic backend at ≥2x
+fewer full simulations (the ISSUE 4 acceptance check)."""
+import numpy as np
+import pytest
+
+from repro.core import has, nas, proxy, scenarios, simulator, sweep
+from repro.core.engine import EvaluationEngine, RecordStore
+from repro.core.pareto import ParetoFrontier
+from repro.core.search import SearchConfig
+from repro.hw import AnalyticBackend, CascadeBackend, HwMetrics, LearnedBackend
+from repro.hw.analytic import ANALYTIC
+
+
+def _rcfg(**kw):
+    from repro.core.reward import RewardConfig
+
+    base = dict(latency_target_ms=0.5,
+                area_target_mm2=simulator.BASELINE_AREA_MM2,
+                energy_target_mj=0.5)
+    base.update(kw)
+    return RewardConfig(**base)
+
+
+def _joint_vecs(nspace, hspace, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([np.concatenate([nspace.sample(rng), hspace.sample(rng)])
+                     for _ in range(n)])
+
+
+# ---------------------------------------------------------------------------
+# protocol + analytic default
+# ---------------------------------------------------------------------------
+
+
+def test_analytic_backend_matches_simulator():
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    rng = np.random.default_rng(0)
+    specs = [nspace.decode(nspace.sample(rng)) for _ in range(32)]
+    hs = [hspace.decode(hspace.sample(rng)) for _ in range(32)]
+    hm = ANALYTIC.estimate_batch(specs, hs)
+    assert isinstance(hm, HwMetrics)
+    assert hm.fidelity == "exact"
+    assert hm.records == simulator.simulate_batch(specs, hs)
+    assert hm.valid_mask == [r is not None for r in hm.records]
+    assert hm.num_valid == sum(hm.valid_mask)
+    # single-candidate convenience
+    assert ANALYTIC.estimate(specs[0], hs[0]) == hm.records[0]
+
+
+def test_explicit_analytic_shares_default_namespace():
+    """backend=AnalyticBackend() must resolve to the same store namespace as
+    an engine built with no backend at all (the pre-backend default) — this
+    is what keeps existing durable stores servable."""
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    store = RecordStore()
+    vecs = _joint_vecs(nspace, hspace, 24, seed=1)
+    e1 = EvaluationEngine(nspace, hspace, acc, _rcfg(), store=store)
+    e1.evaluate_batch(vecs)
+    e2 = EvaluationEngine(nspace, hspace, acc, _rcfg(), store=store,
+                          backend=AnalyticBackend())
+    e2.evaluate_batch(vecs)
+    assert e2.stats.evaluated == 0  # every lookup served from e1's records
+    assert e1._ns == e2._ns
+
+
+def test_non_analytic_backends_namespace_apart():
+    """Cascade records (pruned candidates surface as invalid) must not leak
+    into analytic namespaces and vice versa."""
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    store = RecordStore()
+    vecs = _joint_vecs(nspace, hspace, 16, seed=2)
+    e1 = EvaluationEngine(nspace, hspace, acc, _rcfg(), store=store)
+    e1.evaluate_batch(vecs)
+    casc = CascadeBackend(scenarios=["lat-0.3ms"])
+    e2 = EvaluationEngine(nspace, hspace, acc, _rcfg(), store=store,
+                          backend=casc)
+    e2.evaluate_batch(vecs)
+    assert e2.stats.evaluated == 16  # no cross-backend hits
+    assert e1._ns != e2._ns
+
+
+def test_cascade_namespace_is_content_based():
+    """Two cascade instances over the same scenario set share records (the
+    durable-store contract); different scenario sets do not."""
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    store = RecordStore()
+    vecs = _joint_vecs(nspace, hspace, 16, seed=3)
+    c1 = CascadeBackend(scenarios=["lat-0.3ms"])
+    c2 = CascadeBackend(scenarios=["lat-0.3ms"])
+    c3 = CascadeBackend(scenarios=["lat-1.3ms"])
+    assert c1.cache_key() == c2.cache_key()
+    assert c1.cache_key() != c3.cache_key()
+    e1 = EvaluationEngine(nspace, hspace, acc, _rcfg(), store=store, backend=c1)
+    e1.evaluate_batch(vecs)
+    e2 = EvaluationEngine(nspace, hspace, acc, _rcfg(), store=store, backend=c2)
+    e2.evaluate_batch(vecs)
+    assert e2.stats.evaluated == 0
+    e3 = EvaluationEngine(nspace, hspace, acc, _rcfg(), store=store, backend=c3)
+    e3.evaluate_batch(vecs)
+    assert e3.stats.evaluated == 16
+
+
+def test_learned_backend_identity_follows_model():
+    """Two LearnedBackend wrappers around the SAME model share a namespace
+    (the shim builds a fresh wrapper per engine); different models don't."""
+
+    class _Pred:
+        def predict(self, feats):
+            return 0.1 + 0.01 * feats.sum(axis=1), 50.0 + feats[:, 0]
+
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    store = RecordStore()
+    model = _Pred()
+    vecs = _joint_vecs(nspace, hspace, 16, seed=4)
+    rcfg = _rcfg(energy_target_mj=None)
+    e1 = EvaluationEngine(nspace, hspace, acc, rcfg, store=store,
+                          backend=LearnedBackend(model, nspace, hspace))
+    e1.evaluate_batch(vecs)
+    e2 = EvaluationEngine(nspace, hspace, acc, rcfg, store=store,
+                          predictor=model)  # legacy shim, same model
+    e2.evaluate_batch(vecs)
+    assert e2.stats.evaluated == 0
+    e3 = EvaluationEngine(nspace, hspace, acc, rcfg, store=store,
+                          backend=LearnedBackend(_Pred(), nspace, hspace))
+    e3.evaluate_batch(vecs)
+    assert e3.stats.evaluated == 16
+
+
+def test_joint_only_backend_rejected_in_other_modes():
+    """A LearnedBackend passed to a nas/has-mode engine must fail fast with
+    a clear error (the legacy predictor= path always did)."""
+
+    class _Pred:
+        def predict(self, feats):
+            return np.ones(len(feats)), np.ones(len(feats))
+
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    lb = LearnedBackend(_Pred(), nspace, hspace)
+    with pytest.raises(ValueError, match="joint mode"):
+        EvaluationEngine(nspace, None, proxy.SurrogateAccuracy(),
+                         _rcfg(energy_target_mj=None), fixed_h=has.BASELINE,
+                         backend=lb)
+    from repro.core import search
+
+    with pytest.raises(ValueError, match="joint mode"):
+        search.fixed_hw_search(
+            nspace, proxy.SurrogateAccuracy(), _rcfg(energy_target_mj=None),
+            search.SearchConfig(samples=8, batch=8), backend=lb)
+
+
+def test_analytic_subclass_gets_own_namespace():
+    """Only the exact AnalyticBackend type maps to the unmarked default
+    token — a subclass with different estimates must not share it."""
+
+    class _Tweaked(AnalyticBackend):
+        def cache_key(self):
+            return "tweaked"
+
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    store = RecordStore()
+    vecs = _joint_vecs(nspace, hspace, 8, seed=9)
+    e1 = EvaluationEngine(nspace, hspace, acc, _rcfg(), store=store)
+    e1.evaluate_batch(vecs)
+    e2 = EvaluationEngine(nspace, hspace, acc, _rcfg(), store=store,
+                          backend=_Tweaked())
+    e2.evaluate_batch(vecs)
+    assert e2.stats.evaluated == 8  # no sharing with the true default
+    assert e1._ns != e2._ns
+
+
+def test_cascade_reads_accuracy_lazily():
+    """Accuracy is only evaluated for candidates that reach the dominance
+    stage — statically-invalid and envelope-pruned candidates never pay."""
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    calls = []
+    base = proxy.SurrogateAccuracy()
+
+    def counting_acc(spec):
+        calls.append(spec)
+        return base(spec)
+
+    casc = CascadeBackend(scenarios=["edge-sku-nano"])
+    eng = EvaluationEngine(nspace, hspace, counting_acc, _rcfg(),
+                           cache=False, backend=casc)
+    eng.evaluate_batch(_joint_vecs(nspace, hspace, 96, seed=10))
+    cheap_pruned = casc.stats.static_invalid + casc.stats.envelope_pruned
+    assert cheap_pruned > 0
+    # distinct specs evaluated ≤ candidates that reached the dominance stage
+    assert len(set(calls)) <= 96 - cheap_pruned
+
+
+def test_objective_validation_against_backend_metrics():
+    class _Pred:
+        def predict(self, feats):
+            return np.ones(len(feats)), np.ones(len(feats))
+
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    acc = proxy.SurrogateAccuracy()
+    lb = LearnedBackend(_Pred(), nspace, hspace)
+    assert "energy_mj" not in lb.metrics
+    with pytest.raises(ValueError, match="energy"):
+        EvaluationEngine(nspace, hspace, acc, _rcfg(), backend=lb)
+    eng = EvaluationEngine(nspace, hspace, acc, _rcfg(energy_target_mj=None),
+                           backend=lb)
+    with pytest.raises(ValueError, match="energy"):
+        eng.set_objective(_rcfg())
+    with pytest.raises(ValueError):  # non-exact backends have no looped ref
+        eng.evaluate_looped(_joint_vecs(nspace, hspace, 2))
+
+
+# ---------------------------------------------------------------------------
+# lower bounds (the cascade's cheap stage)
+# ---------------------------------------------------------------------------
+
+
+def test_lower_bounds_are_sound():
+    """For every valid candidate the bound must not exceed the simulator's
+    value (latency, energy), the area must be exact, and the static-validity
+    mask must mirror validate()."""
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    rng = np.random.default_rng(7)
+    specs = [nspace.decode(nspace.sample(rng)) for _ in range(256)]
+    hs = [hspace.decode(hspace.sample(rng)) for _ in range(256)]
+    for batch in (1, 8):
+        lb = simulator.lower_bounds(specs, hs, batch=batch)
+        sims = simulator.simulate_batch(specs, hs, batch=batch)
+        checked = 0
+        for i, s in enumerate(sims):
+            want_invalid = simulator.validate(
+                hs[i], simulator.model_weight_bytes(specs[i])) is not None
+            assert bool(lb["invalid"][i]) == want_invalid
+            if s is None:
+                continue
+            assert lb["latency_ms"][i] <= s["latency_ms"]
+            assert lb["energy_mj"][i] <= s["energy_mj"]
+            assert lb["area_mm2"][i] == pytest.approx(s["area_mm2"], rel=1e-12)
+            checked += 1
+        assert checked > 50  # the stream must exercise the bound for real
+
+
+def test_lower_bounds_are_nontrivial():
+    """The bound must actually bite: within a factor of the true latency for
+    most candidates (otherwise envelope pruning would never fire)."""
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    rng = np.random.default_rng(11)
+    specs = [nspace.decode(nspace.sample(rng)) for _ in range(128)]
+    hs = [hspace.decode(hspace.sample(rng)) for _ in range(128)]
+    lb = simulator.lower_bounds(specs, hs)
+    sims = simulator.simulate_batch(specs, hs)
+    ratios = [lb["latency_ms"][i] / s["latency_ms"]
+              for i, s in enumerate(sims) if s is not None]
+    assert np.median(ratios) > 0.2
+
+
+# ---------------------------------------------------------------------------
+# cascade: acceptance — same best config per scenario, >= 2x fewer full sims
+# ---------------------------------------------------------------------------
+
+
+def test_cascade_agrees_with_analytic_at_half_the_simulations():
+    """Replay the quick sweep preset's candidate stream through the cascade:
+    per-scenario frontier picks must match the full analytic backend's, with
+    at least 2x fewer full simulations (the ISSUE acceptance criterion; the
+    prefilter rules are conservative by construction, so agreement is not a
+    statistical accident)."""
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    runner = sweep.SweepRunner(
+        "paper-use-cases", nspace, proxy.SurrogateAccuracy(),
+        sweep.SweepConfig(search=SearchConfig(samples=96, batch=16, seed=0)))
+    result = runner.run()
+    analytic_sims = result.store_stats["puts"]
+
+    # the deduplicated candidate stream, in evaluation order
+    seen, stream = set(), []
+    for outcome in result.outcomes:
+        for rec in outcome.result.history:
+            if rec["vec"] not in seen:
+                seen.add(rec["vec"])
+                stream.append(rec["vec"])
+    assert len(stream) == analytic_sims
+
+    casc = CascadeBackend(scenarios=runner.scenarios)
+    eng = EvaluationEngine(
+        nspace, hspace, runner.acc_fn,
+        runner.scenarios[0].reward_config(), backend=casc, cache=False)
+    recs = eng.evaluate_batch(np.array(stream, dtype=np.int64))
+    frontier = ParetoFrontier()
+    for vec, rec in zip(stream, recs):
+        rec["vec"] = vec
+        frontier.add(rec)
+
+    assert casc.stats.requested == analytic_sims
+    assert analytic_sims >= 2 * casc.stats.refined, casc.stats.as_dict()
+
+    for sc in runner.scenarios:
+        exact_best = result.frontier.best(sc)
+        casc_best = frontier.best(sc)
+        assert sc.feasible(exact_best), "preset must stay satisfiable"
+        assert casc_best is not None
+        assert casc_best["vec"] == exact_best["vec"], sc.name
+        for key in ("accuracy", "latency_ms", "energy_mj", "area_mm2"):
+            assert casc_best[key] == exact_best[key], (sc.name, key)
+
+
+def test_cascade_refined_records_are_exact():
+    """Candidates that survive the prefilter get full-fidelity records,
+    bitwise-equal to the analytic backend's."""
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    vecs = _joint_vecs(nspace, hspace, 64, seed=5)
+    exact = EvaluationEngine(nspace, hspace, acc, _rcfg(), cache=False)
+    casc = EvaluationEngine(nspace, hspace, acc, _rcfg(), cache=False,
+                            backend=CascadeBackend(scenarios=["lat-0.3ms"]))
+    for re, rc in zip(exact.evaluate_batch(vecs), casc.evaluate_batch(vecs)):
+        if rc["valid"]:
+            assert rc == re  # refined -> identical record
+        # pruned candidates surface as invalid; nothing further to compare
+
+
+def test_cascade_stage_counters_add_up():
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    casc = CascadeBackend(scenarios=["edge-sku-nano"])
+    eng = EvaluationEngine(nspace, hspace, acc, _rcfg(), cache=False,
+                           backend=casc)
+    eng.evaluate_batch(_joint_vecs(nspace, hspace, 96, seed=6))
+    st = casc.stats
+    assert st.requested == 96
+    assert st.requested == st.pruned + st.refined
+    assert st.pruned > 0 and st.refined > 0
+    d = st.as_dict()
+    assert d["prune_rate"] == pytest.approx(st.pruned / 96)
+
+
+def test_cascade_without_scenarios_still_prunes_dominated():
+    """No envelope: only static validity + dominance fire (incumbents grow
+    batch over batch), and both rules are exact-preserving."""
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    acc = proxy.CachedAccuracy(proxy.SurrogateAccuracy())
+    casc = CascadeBackend()
+    eng = EvaluationEngine(nspace, hspace, acc, _rcfg(), cache=False,
+                           backend=casc)
+    rng = np.random.default_rng(8)
+    for _ in range(4):
+        eng.evaluate_batch(np.stack([
+            np.concatenate([nspace.sample(rng), hspace.sample(rng)])
+            for _ in range(64)
+        ]))
+    assert casc.stats.envelope_pruned == 0
+    assert casc.stats.dominance_pruned > 0
+
+
+# ---------------------------------------------------------------------------
+# pod roofline backend
+# ---------------------------------------------------------------------------
+
+
+def test_pod_roofline_backend_protocol():
+    from repro import configs
+    from repro.config import SHAPES
+    from repro.core.meshsearch import DEFAULT_REF, PodCostModel
+    from repro.hw.roofline import PodRooflineBackend
+
+    assert PodCostModel is PodRooflineBackend  # compatibility alias
+    cfg = configs.get("mamba2-370m")
+    backend = PodRooflineBackend(cfg, SHAPES["train_4k"])
+    good = dict(DEFAULT_REF)
+    # power-of-two global batches never divide by 3: rejected split
+    bad = dict(DEFAULT_REF, mesh=(3, 85), microbatches=1)
+    hm = backend.estimate_batch([None, None], [good, bad])
+    assert hm.fidelity == "roofline"
+    assert hm.records[0] == backend.evaluate(good)
+    rec = hm.records[0]
+    assert rec["step_s"] == max(
+        rec["compute_s"], rec["memory_s"], rec["collective_s"])
+    assert rec["latency_ms"] == pytest.approx(rec["step_s"] * 1e3)
+    assert hm.records[1] is None  # HBM overflow / bad split rejected
+    assert "mamba2-370m" in backend.cache_key()

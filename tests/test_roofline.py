@@ -1,0 +1,137 @@
+"""launch/roofline.py + launch/hwspecs.py (previously untested): collective
+parsing from post-SPMD HLO text, the ring-model wire-byte formulas, and the
+three-term roofline max under synthetic ChipSpecs."""
+import dataclasses
+
+import pytest
+
+from repro.launch.hwspecs import PODS, V5E, ChipSpec
+from repro.launch.roofline import (
+    CollectiveStats,
+    _group_size,
+    _shape_bytes,
+    parse_collectives,
+    roofline_terms,
+)
+
+# A plausible post-SPMD module slice: one instruction per collective flavor,
+# both replica_groups encodings, an async pair, and non-collective lines the
+# regex must ignore.
+SAMPLE_HLO = """\
+HloModule jit_step, entry_computation_layout={...}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %sum = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %mm = f32[8,128]{1,0} dot(f32[8,128] %p0, f32[128,128] %w)
+  %ar = f32[8,128]{1,0} all-reduce(f32[8,128] %mm), replica_groups=[1,8]<=[8], to_apply=%add
+  %ag = bf16[32,256]{1,0} all-gather(bf16[8,256] %x), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[2,64]{1,0} reduce-scatter(f32[8,64] %y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %a2a = bf16[16,16]{1,0} all-to-all(bf16[16,16] %z), replica_groups={{0,1}}
+  %cp = u8[1024]{0} collective-permute(u8[1024] %q), source_target_pairs={{0,1},{1,0}}
+  %ars = f32[4,4]{1,0} all-reduce-start(f32[4,4] %m), replica_groups=[1,2]<=[2], to_apply=%add
+  %ard = f32[4,4]{1,0} all-reduce-done(f32[4,4] %ars)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]") == 8 * 128 * 4
+    assert _shape_bytes("bf16[32,256]") == 32 * 256 * 2
+    assert _shape_bytes("u8[1024]") == 1024
+    assert _shape_bytes("pred[7]") == 7
+    # tuple shapes sum their parts; unknown dtypes are skipped
+    assert _shape_bytes("(f32[4], bf16[4])") == 4 * 4 + 4 * 2
+    assert _shape_bytes("token[]") == 0
+
+
+def test_group_size_encodings():
+    assert _group_size("replica_groups=[2,4]<=[8]") == 4
+    assert _group_size("replica_groups={{0,1,2,3}}") == 4
+    assert _group_size("no groups here at all") == 2  # conservative default
+
+
+def test_parse_collectives_counts_and_ring_formulas():
+    stats = parse_collectives(SAMPLE_HLO)
+    assert stats.counts == {
+        "all-reduce": 2,
+        "all-gather": 1,
+        "reduce-scatter": 1,
+        "all-to-all": 1,
+        "collective-permute": 1,
+    }
+
+    ar = 8 * 128 * 4        # f32[8,128] result
+    ag = 32 * 256 * 2       # bf16[32,256] gathered result
+    rs = 2 * 64 * 4         # f32[2,64] scattered shard
+    a2a = 16 * 16 * 2
+    cp = 1024
+    ars = 4 * 4 * 4         # the -start instruction (done line is skipped)
+    assert stats.result_bytes["all-reduce"] == ar + ars
+    assert stats.result_bytes["all-gather"] == ag
+    assert stats.result_bytes["reduce-scatter"] == rs
+
+    # ring-model wire bytes per chip
+    assert stats.wire_bytes["all-reduce"] == pytest.approx(
+        2 * ar * (8 - 1) / 8 + 2 * ars * (2 - 1) / 2)
+    assert stats.wire_bytes["all-gather"] == pytest.approx(ag * (4 - 1) / 4)
+    assert stats.wire_bytes["reduce-scatter"] == pytest.approx(rs * (4 - 1))
+    assert stats.wire_bytes["all-to-all"] == pytest.approx(a2a * (2 - 1) / 2)
+    assert stats.wire_bytes["collective-permute"] == cp
+
+    assert stats.total_result == sum(stats.result_bytes.values())
+    assert stats.total_wire == sum(stats.wire_bytes.values())
+    d = stats.to_dict()
+    assert d["total_wire_bytes"] == stats.total_wire
+
+
+def test_parse_collectives_ignores_plain_compute():
+    assert parse_collectives("%mm = f32[8,8] dot(f32[8,8] %a)").counts == {}
+
+
+def test_roofline_terms_three_term_max():
+    coll = CollectiveStats(
+        counts={"all-reduce": 1},
+        result_bytes={"all-reduce": 1e9},
+        wire_bytes={"all-reduce": 2e9},
+    )
+    cost = {"flops": 4e12, "bytes accessed": 8e9}
+
+    compute_chip = ChipSpec(name="fast-net", peak_bf16_flops=1e12,
+                            hbm_bw=1e12, ici_link_bw=1e12)
+    terms = roofline_terms(cost, coll, compute_chip)
+    assert terms["compute_s"] == pytest.approx(4.0)
+    assert terms["memory_s"] == pytest.approx(8e9 / 1e12)
+    assert terms["collective_s"] == pytest.approx(2e9 / 1e12)
+    assert terms["dominant"] == "compute_s"
+    assert terms["step_lower_bound_s"] == pytest.approx(4.0)
+
+    slow_hbm = ChipSpec(name="slow-hbm", peak_bf16_flops=1e15,
+                        hbm_bw=1e9, ici_link_bw=1e12)
+    terms = roofline_terms(cost, coll, slow_hbm)
+    assert terms["dominant"] == "memory_s"
+    assert terms["step_lower_bound_s"] == pytest.approx(8.0)
+
+    slow_ici = ChipSpec(name="slow-ici", peak_bf16_flops=1e15,
+                        hbm_bw=1e15, ici_link_bw=1e8)
+    terms = roofline_terms(cost, coll, slow_ici)
+    assert terms["dominant"] == "collective_s"
+    assert terms["step_lower_bound_s"] == pytest.approx(20.0)
+    # the step lower bound is always the max of the three terms
+    assert terms["step_lower_bound_s"] == max(
+        terms["compute_s"], terms["memory_s"], terms["collective_s"])
+
+
+def test_chipspec_is_frozen_and_v5e_calibrated():
+    assert dataclasses.is_dataclass(ChipSpec)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        dataclasses.replace(V5E).peak_bf16_flops = 0  # type: ignore[misc]
+    # the assignment's v5e-class targets
+    assert V5E.peak_bf16_flops == pytest.approx(197e12)
+    assert V5E.hbm_bw == pytest.approx(819e9)
+    assert V5E.ici_link_bw == pytest.approx(50e9)
+    assert V5E.hbm_bytes == 16 * 1024**3
+    assert PODS == {"single": 256, "multi": 512}

@@ -367,6 +367,83 @@ def test_drivers_accept_scenario_and_tag_records():
                             proxy.SurrogateAccuracy(noise_pct=0.0))
 
 
+def test_energy_scenario_runs_on_learned_path():
+    """ISSUE 4 satellite: energy-target scenarios work on the learned
+    backend when the predictor has an energy head (PR 2 had to reject
+    them)."""
+    from repro.hw import LearnedBackend
+
+    class _EnergyPredictor:
+        has_energy = True
+
+        def predict(self, feats):
+            return 0.1 + 0.01 * feats.sum(axis=1), 40.0 + feats[:, 0]
+
+        def predict_all(self, feats):
+            lat, area = self.predict(feats)
+            return {"latency_ms": lat, "area_mm2": area,
+                    "energy_mj": 0.2 + 0.001 * feats.sum(axis=1)}
+
+    sc = scenarios.get("energy-0.7mJ")
+    res = search.joint_search(
+        nas.tiny_space(), proxy.SurrogateAccuracy(noise_pct=0.0),
+        cfg=search.SearchConfig(samples=32, batch=8, seed=0), scenario=sc,
+        backend=LearnedBackend(_EnergyPredictor(), nas.tiny_space(),
+                               has_lib.has_space()))
+    assert len(res.history) == 32
+    valid = [h for h in res.history if h["valid"]]
+    assert valid
+    for h in valid:
+        assert h["predicted"] and h["energy_mj"] is not None
+        assert h["meets_constraints"] == sc.feasible(h)
+    assert res.best_record is not None
+
+
+def test_cost_model_energy_head_end_to_end():
+    """The third head: energy labels from the simulator, log-standardized
+    like the others, served through predict_all — and absent by default."""
+    from repro.core import costmodel
+    from repro.hw import LearnedBackend
+
+    ns, hs = nas.tiny_space(), has_lib.has_space()
+    feats, lat, area, energy = costmodel.generate_dataset(
+        ns, hs, 400, seed=0, include_energy=True)
+    assert energy.shape == lat.shape and (energy > 0).all()
+    # the first three returns match the energy-less dataset exactly
+    f2, l2, a2 = costmodel.generate_dataset(ns, hs, 400, seed=0)
+    assert (f2 == feats).all() and (l2 == lat).all() and (a2 == area).all()
+
+    cfg = costmodel.CostModelConfig(steps=600, batch=64)
+    model, metrics = costmodel.train(feats, lat, area, cfg, energy_mj=energy)
+    assert model.has_energy
+    assert metrics["val_energy_mape"] < 1.0
+    pred = model.predict_all(feats[:8])
+    assert (pred["energy_mj"] > 0).all()
+    # predict() (the 2-tuple protocol) is untouched by the extra head
+    plat, parea = model.predict(feats[:8])
+    assert (plat == pred["latency_ms"]).all()
+    assert (parea == pred["area_mm2"]).all()
+
+    # a trained 3-head model satisfies an energy-target engine...
+    backend = LearnedBackend(model, ns, hs)
+    assert "energy_mj" in backend.metrics
+    sc = scenarios.get("energy-0.7mJ")
+    eng = EvaluationEngine(ns, hs, proxy.SurrogateAccuracy(),
+                           sc.reward_config(), backend=backend, cache=False)
+    recs = eng.evaluate_batch(_joint_vecs(ns, hs, 16, seed=2))
+    assert any(r["valid"] and r["energy_mj"] is not None for r in recs)
+
+    # ...while a 2-head model still cannot certify energy targets
+    model2, _ = costmodel.train(feats, lat, area,
+                                costmodel.CostModelConfig(steps=50, batch=64))
+    assert not model2.has_energy
+    assert model2.predict_all(feats[:4])["energy_mj"] is None
+    with pytest.raises(ValueError, match="energy"):
+        EvaluationEngine(ns, hs, proxy.SurrogateAccuracy(),
+                         sc.reward_config(),
+                         backend=LearnedBackend(model2, ns, hs))
+
+
 def test_phase_records_carry_frozen_config_identity():
     """Every history record names the frozen half of its (α, h) pair: phase-1
     HAS records the architecture id, phase-2 NAS records the accelerator."""
