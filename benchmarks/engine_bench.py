@@ -35,6 +35,7 @@ from repro.models import convnets as C
 def _clear_struct_caches() -> None:
     simulator._MATRIX_CACHE.clear()
     simulator._SEG_CACHE.clear()
+    simulator._HW_ROW_CACHE.clear()
     C._LAYER_OPS_CACHE.clear()
 
 

@@ -4,8 +4,11 @@ Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8] [--quick]
 
-``--quick`` runs the CI smoke subset (engine micro-benchmark + roofline) at
-fast settings.
+``--quick`` runs the CI smoke subset (engine + search-loop micro-benchmarks,
+hw-backend cascade, roofline) at fast settings. A benchmark module may
+define ``setup(fast=...)`` — run before timing; a setup failure fails the
+bench (e.g. roofline generates its dry-run artifacts instead of silently
+reporting an empty table).
 
 Every benchmark also writes ``BENCH_<name>.json`` at the repo root with the
 shared schema ``{"name", "wall_s", "metrics"}`` (metrics = the scalar
@@ -22,6 +25,7 @@ import traceback
 
 BENCHES = [
     ("engine", "benchmarks.engine_bench"),
+    ("search_loop", "benchmarks.search_loop_bench"),
     ("fig1_energy", "benchmarks.fig1_energy"),
     ("fig6_costmodel", "benchmarks.fig6_costmodel"),
     ("fig7_samples", "benchmarks.fig7_samples"),
@@ -38,7 +42,7 @@ BENCHES = [
     ("roofline", "benchmarks.roofline"),
 ]
 
-QUICK = ("engine", "hw_backend", "roofline")
+QUICK = ("engine", "search_loop", "hw_backend", "roofline")
 
 
 def main() -> None:
@@ -64,6 +68,12 @@ def main() -> None:
             continue
         try:
             mod = importlib.import_module(modname)
+            # a bench may declare a setup hook (e.g. roofline generates its
+            # dry-run artifacts); setup failures fail the bench — no bench
+            # may silently emit an empty result for missing inputs
+            setup = getattr(mod, "setup", None)
+            if setup is not None:
+                setup(fast=not args.full)
             t0 = time.monotonic()
             out = mod.run(fast=not args.full)
             dt = time.monotonic() - t0

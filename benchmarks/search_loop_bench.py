@@ -1,0 +1,273 @@
+"""Search hot-path benchmark: trajectory-v2 vectorized controllers and the
+columnar engine loop vs the retired v1 per-draw loop.
+
+Two measurements, written to ``BENCH_search_loop.json``:
+
+* **controller** — sample+update throughput (samples/s) on the joint
+  (tiny × HAS) space at controller batch 16: the v2 controller (one
+  ``rng.random((n, D))`` draw per batch + one fused jitted update) against
+  a faithful in-bench copy of the v1 loop (per-(vector, decision)
+  ``rng.choice``, per-vector ``_logp`` dispatches, per-leaf ``tree.map``
+  Adam). The acceptance bar is ≥ 5x.
+* **end-to-end** — the quick sweep preset (paper-use-cases × tiny space,
+  96 samples/scenario) through the full new stack vs the same sweep driven
+  by the legacy v1 controller. The acceptance bar is ≥ 2x vs the pre-PR
+  analytic baseline (``BENCH_hw_backend.json``: ~33.5 s for 576
+  candidates; the in-bench ``sweep_old_wall_s`` is a *conservative* stand-in
+  — the v1 controller over the already-columnar engine).
+* **selection agreement** — two checks. ``replay``: the v1 sweep's exact
+  candidate stream re-evaluated through the new columnar engine must
+  reproduce identical per-scenario best configs (records are
+  bitwise-stable, so on a fixed stream selections cannot move) — this is
+  the check that pins the evaluation refactor. ``trajectory``: the v1 and
+  v2 runs follow different RNG trajectories (that is the declared v2
+  contract), so their picks are compared by *selection quality* — the best
+  reward per scenario under that scenario's objective must be equal or
+  better under v2 (hard-mode plateaus make exact-vec identity across
+  trajectories meaningless: many (α, h) pairs tie at reward = accuracy).
+
+The v1 controller lives HERE, not in ``repro.core.controllers`` — the
+library is single-path (v2), and resume validation rejects v1 checkpoints.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import has, nas, proxy, sweep
+from repro.core.controllers import CONTROLLERS, PPOConfig, PPOController
+from repro.core.engine import EvaluationEngine
+from repro.core.pareto import ParetoFrontier
+from repro.core.search import SearchConfig
+from repro.core.space import Space, concat
+
+PRESET = "paper-use-cases"
+SAMPLES = 96
+BATCH = 16
+
+
+# ---------------------------------------------------------------------------
+# The retired v1 controller (pre-PR), verbatim semantics: per-draw sampling,
+# per-vector old-log-prob dispatches, per-leaf tree.map Adam.
+# ---------------------------------------------------------------------------
+
+
+class _AdamV1:
+    def __init__(self, params, lr):
+        self.lr = lr
+        self.m = jax.tree.map(jnp.zeros_like, params)
+        self.v = jax.tree.map(jnp.zeros_like, params)
+        self.t = 0
+
+    def step(self, params, grads, clip=None):
+        if clip is not None:
+            gn = jnp.sqrt(sum(jnp.sum(g**2) for g in jax.tree.leaves(grads)) + 1e-12)
+            scale = jnp.minimum(1.0, clip / gn)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        self.t += 1
+        self.m = jax.tree.map(lambda m, g: 0.9 * m + 0.1 * g, self.m, grads)
+        self.v = jax.tree.map(lambda v, g: 0.999 * v + 0.001 * g**2, self.v, grads)
+        bc1 = 1 - 0.9**self.t
+        bc2 = 1 - 0.999**self.t
+        return jax.tree.map(
+            lambda p, m, v: p - self.lr * (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8),
+            params,
+            self.m,
+            self.v,
+        )
+
+
+def _logp_v1(logits, vec):
+    lp = 0.0
+    for lg, v in zip(logits, vec):
+        lp = lp + jax.nn.log_softmax(lg)[v]
+    return lp
+
+
+class LegacyPPOController:
+    """The pre-PR (trajectory v1) PPO loop, for old-vs-new comparison."""
+
+    def __init__(self, space: Space, cfg: PPOConfig = PPOConfig(), seed: int = 0):
+        self.space = space
+        self.cfg = cfg
+        self.logits = [jnp.zeros((len(c),), jnp.float32) for c in space.choices]
+        self.opt = _AdamV1(self.logits, cfg.lr)
+        self.rng = np.random.default_rng(seed)
+        self.baseline = 0.0
+        self._b_init = False
+
+    def warm_start(self, offset, base_vec, logit):
+        for i, v in enumerate(base_vec):
+            lg = self.logits[offset + i]
+            self.logits[offset + i] = lg.at[int(v)].set(logit)
+
+    def sample(self, n: int) -> np.ndarray:
+        probs = [np.asarray(jax.nn.softmax(lg)) for lg in self.logits]
+        probs = [p / p.sum() for p in probs]
+        out = np.empty((n, len(probs)), np.int32)
+        for i in range(n):
+            for j, p in enumerate(probs):
+                out[i, j] = self.rng.choice(len(p), p=p)
+        return out
+
+    def update(self, vecs: np.ndarray, rewards: np.ndarray):
+        rewards = np.asarray(rewards, np.float32)
+        if not self._b_init:
+            self.baseline = float(rewards.mean())
+            self._b_init = True
+        adv = rewards - self.baseline
+        if adv.std() > 1e-8:
+            adv = adv / (adv.std() + 1e-8)
+        self.baseline = 0.9 * self.baseline + 0.1 * float(rewards.mean())
+        old_lp = np.array([float(_logp_v1(self.logits, v)) for v in vecs], np.float32)
+        vecs_j = jnp.asarray(vecs)
+        adv_j = jnp.asarray(adv)
+        old_j = jnp.asarray(old_lp)
+
+        if not hasattr(self, "_grad_fn"):
+            clip_eps, ent_coef = self.cfg.clip_eps, self.cfg.entropy_coef
+
+            def loss_fn(logits, vecs_j, adv_j, old_j):
+                lps = []
+                ent = 0.0
+                for i, lg in enumerate(logits):
+                    lsm = jax.nn.log_softmax(lg)
+                    lps.append(lsm[vecs_j[:, i]])
+                    ent = ent + (-jnp.sum(jnp.exp(lsm) * lsm))
+                lp = sum(lps)
+                ratio = jnp.exp(lp - old_j)
+                clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps)
+                obj = jnp.mean(jnp.minimum(ratio * adv_j, clipped * adv_j))
+                return -(obj + ent_coef * ent / len(logits))
+
+            self._grad_fn = jax.jit(jax.grad(loss_fn))
+        for _ in range(self.cfg.epochs):
+            grads = self._grad_fn(self.logits, vecs_j, adv_j, old_j)
+            self.logits = self.opt.step(self.logits, grads, clip=self.cfg.grad_clip)
+
+    def best(self) -> np.ndarray:
+        return np.array([int(jnp.argmax(lg)) for lg in self.logits], np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Benchmark
+# ---------------------------------------------------------------------------
+
+
+def _controller_wall(ctrl, n_batches: int, batch: int) -> float:
+    """Wall of a sample+update loop under a cheap deterministic reward."""
+    d = ctrl.space.num_decisions
+    t0 = time.monotonic()
+    for _ in range(n_batches):
+        vecs = ctrl.sample(batch)
+        rewards = vecs.sum(axis=1) / (4.0 * d)
+        ctrl.update(vecs, np.asarray(rewards, np.float64))
+    return time.monotonic() - t0
+
+
+def _sweep(controller: str):
+    cfg = sweep.SweepConfig(
+        search=SearchConfig(samples=SAMPLES, batch=BATCH, seed=0, controller=controller)
+    )
+    runner = sweep.SweepRunner(
+        PRESET, nas.tiny_space(), proxy.SurrogateAccuracy(), cfg
+    )
+    t0 = time.monotonic()
+    res = runner.run()
+    return res, time.monotonic() - t0
+
+
+def run(fast: bool = True) -> dict:
+    joint = concat(nas.tiny_space(), has.has_space())
+    n_batches = 20 if fast else 60
+
+    # warm both jits outside the timed region (one throwaway batch each)
+    for cls in (PPOController, LegacyPPOController):
+        c = cls(joint, seed=99)
+        c.update(c.sample(BATCH), np.zeros(BATCH))
+
+    wall_v2 = _controller_wall(PPOController(joint, seed=0), n_batches, BATCH)
+    wall_v1 = _controller_wall(LegacyPPOController(joint, seed=0), n_batches, BATCH)
+    n = n_batches * BATCH
+    ctrl_speedup = wall_v1 / wall_v2
+
+    # end-to-end: the quick sweep, new stack vs the legacy controller
+    new_res, new_wall = _sweep("ppo")
+    CONTROLLERS["ppo_v1"] = LegacyPPOController
+    try:
+        old_res, old_wall = _sweep("ppo_v1")
+    finally:
+        del CONTROLLERS["ppo_v1"]
+    n_sc = len(new_res.outcomes)
+    total = SAMPLES * n_sc
+
+    # replay: the v1 stream re-evaluated through the new columnar engine, in
+    # history order — per-scenario selections must be IDENTICAL (records are
+    # bitwise-stable under the refactor, so a fixed stream fixes the picks)
+    eng = EvaluationEngine(
+        nas.tiny_space(),
+        has.has_space(),
+        proxy.SurrogateAccuracy(),
+        old_res.outcomes[0].scenario.reward_config(),
+        cache=False,
+    )
+    frontier = ParetoFrontier()
+    for outcome in old_res.outcomes:
+        hist = outcome.result.history
+        vecs = np.array([r["vec"] for r in hist], np.int64)
+        for v, rec in zip(hist, eng.evaluate_batch(vecs)):
+            rec["vec"] = v["vec"]
+            frontier.add(rec)
+    replay_agree = sum(
+        1
+        for o in old_res.outcomes
+        if (frontier.best(o.scenario) or {}).get("vec") == (o.best or {}).get("vec")
+    )
+
+    # trajectory: v2 selections must be reward-equivalent to v1's per
+    # scenario (ratio ~1.0; small deviations are exploration noise between
+    # the two declared-different trajectories, not machinery differences)
+    def _score(outcome):
+        b = outcome.best
+        return None if b is None else outcome.scenario.score(b)
+
+    ratios = [
+        _score(a) / _score(b)
+        for a, b in zip(new_res.outcomes, old_res.outcomes)
+        if _score(a) is not None and _score(b)
+    ]
+    min_quality_ratio = min(ratios) if ratios else 0.0
+
+    return {
+        "controller_batches": n_batches,
+        "controller_batch": BATCH,
+        "controller_v1_samples_per_s": n / wall_v1,
+        "controller_v2_samples_per_s": n / wall_v2,
+        "controller_speedup": ctrl_speedup,
+        "sweep_samples_per_scenario": SAMPLES,
+        "sweep_scenarios": n_sc,
+        "sweep_old_wall_s": old_wall,
+        "sweep_new_wall_s": new_wall,
+        "sweep_speedup": old_wall / new_wall,
+        "sweep_old_candidates_per_s": total / old_wall,
+        "sweep_new_candidates_per_s": total / new_wall,
+        "replay_best_config_agreement": f"{replay_agree}/{n_sc}",
+        "replay_agreement_ok": replay_agree == n_sc,
+        "trajectory_min_quality_ratio": min_quality_ratio,
+        "n_evals": total,
+        "derived": (
+            f"controller {ctrl_speedup:.1f}x ({n / wall_v1:.0f}->"
+            f"{n / wall_v2:.0f} samples/s); quick sweep "
+            f"{old_wall / new_wall:.1f}x ({old_wall:.1f}s->{new_wall:.1f}s, "
+            f"{total / new_wall:.0f} cand/s); replay best configs "
+            f"{replay_agree}/{n_sc}, v2/v1 selection quality >= "
+            f"{min_quality_ratio:.3f}"
+        ),
+    }
+
+
+if __name__ == "__main__":
+    print(run()["derived"])

@@ -141,3 +141,35 @@ def round_up(a: int, b: int) -> int:
 def asdict_shallow(dc) -> dict:
     """dataclasses.asdict without deep-copying arrays."""
     return {f.name: getattr(dc, f.name) for f in dataclasses.fields(dc)}
+
+
+class FifoDict(dict):
+    """A dict that evicts its oldest entry (insertion order) at a size cap —
+    the ``engine.RecordStore`` eviction pattern as a reusable container.
+
+    Drop-in for the module-level memo caches (``simulator._MATRIX_CACHE``,
+    ``proxy.CachedAccuracy``): a full cache sheds one cold entry per insert
+    instead of dumping the whole working set, so steady-state hit rates
+    survive the cap. Evictions are counted in ``self.evictions``.
+
+    Unlocked, like the plain dicts it replaces — but those caches are
+    written from N concurrent searches (``repro.runtime.SearchExecutor``),
+    so the evict step tolerates races: a key another thread already evicted
+    (KeyError) or an iterator invalidated mid-eviction (RuntimeError) just
+    retries against the re-checked size.
+    """
+
+    def __init__(self, max_entries: int):
+        super().__init__()
+        self.max_entries = max_entries
+        self.evictions = 0
+
+    def __setitem__(self, key, value) -> None:
+        if key not in self:
+            while len(self) >= self.max_entries:
+                try:
+                    super().__delitem__(next(iter(self)))
+                    self.evictions += 1
+                except (KeyError, RuntimeError, StopIteration):
+                    continue  # racing evictor got there first; re-check size
+        super().__setitem__(key, value)

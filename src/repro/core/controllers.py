@@ -12,6 +12,31 @@
 
 All controllers speak integer decision vectors (see core.space.Space).
 
+Trajectory v2 (the vectorized sampler/update contract)
+------------------------------------------------------
+The factorized-categorical controllers store the whole policy as ONE padded
+``(D, C_max)`` float32 logits matrix with a validity mask (row d holds
+decision d's ``arity[d]`` live options; padding is pinned at ``-1e9`` and its
+gradients are masked to zero). On top of that single tensor:
+
+* ``sample(n)`` draws the whole batch from one ``rng.random((n, D))`` call
+  against precomputed per-decision CDFs (inverse-CDF transform) — O(1) RNG
+  dispatches per batch instead of the v1 per-(vector, decision)
+  ``rng.choice`` loop. The CDF is cached and recomputed only when the logits
+  change.
+* ``update(vecs, rewards)`` is ONE jitted call that fuses the old log-probs,
+  the PPO epoch loop (``lax.scan``), the global-norm gradient clip and the
+  Adam step on the logits matrix — eliminating the v1 O(n·D) per-vector
+  ``_logp`` dispatches and the per-leaf ``jax.tree.map`` Adam.
+
+v2 consumes the seed stream differently from v1, so same-seed trajectories
+differ across the two versions (while staying deterministic within each).
+``state()`` therefore carries ``version: 2``; ``load_state`` refuses v1
+snapshots with a clear error — a resumed search can never silently diverge
+by mixing sampler versions. ``EvolutionController`` samples through
+``Space.sample``/``Space.mutate`` exactly as before (its trajectory is
+unchanged and its checkpoints remain version-free).
+
 Every controller is checkpointable: ``state()`` returns a plain
 numpy/python snapshot (policy params, optimizer moments, RNG state,
 baselines) and ``load_state(state)`` restores it such that the remaining
@@ -29,65 +54,94 @@ import numpy as np
 
 from repro.core.space import Space
 
+#: trajectory contract version of the vectorized factorized-categorical
+#: sampler/update (see module docstring)
+TRAJECTORY_VERSION = 2
 
-def _init_logits(space: Space) -> list[jnp.ndarray]:
-    return [jnp.zeros((len(c),), jnp.float32) for c in space.choices]
-
-
-def _sample_batch(logits, rng: np.random.Generator, n: int) -> np.ndarray:
-    """Draw ``n`` decision vectors. The softmax per decision point is computed
-    once for the whole batch (it dominated per-sample cost as a jax dispatch);
-    the generator is still consumed one categorical draw at a time, in the
-    same (vector, decision) order as the original per-vector loop, so
-    trajectories are unchanged."""
-    probs = [np.asarray(jax.nn.softmax(lg)) for lg in logits]
-    probs = [p / p.sum() for p in probs]
-    out = np.empty((n, len(probs)), np.int32)
-    for i in range(n):
-        for j, p in enumerate(probs):
-            out[i, j] = rng.choice(len(p), p=p)
-    return out
+# padding logit: large-negative instead of -inf so exp() underflows to an
+# exact 0.0 without spawning nan through 0 * -inf in the entropy term
+_PAD = -1e9
 
 
-def _logp(logits, vec) -> jnp.ndarray:
-    lp = 0.0
-    for lg, v in zip(logits, vec):
-        lp = lp + jax.nn.log_softmax(lg)[v]
-    return lp
+def _pack_space(space: Space) -> tuple[jnp.ndarray, np.ndarray, np.ndarray]:
+    """(D, C_max) zero logits with ``_PAD`` padding, validity mask, arity."""
+    arity = np.asarray(space.arity, np.int64)
+    mask = np.arange(int(arity.max()))[None, :] < arity[:, None]
+    logits = jnp.where(jnp.asarray(mask), 0.0, _PAD).astype(jnp.float32)
+    return logits, mask, arity
 
 
-class _Adam:
-    def __init__(self, params, lr):
-        self.lr = lr
-        self.m = jax.tree.map(jnp.zeros_like, params)
-        self.v = jax.tree.map(jnp.zeros_like, params)
-        self.t = 0
+def _v1_state_error(ctrl: str) -> ValueError:
+    return ValueError(
+        f"{ctrl} checkpoint was written by the trajectory v1 (per-draw) "
+        f"sampler; this build runs trajectory v{TRAJECTORY_VERSION} (one "
+        f"vectorized draw per batch), which consumes the RNG differently — "
+        f"resuming would silently diverge from the original run. Restart "
+        f"the search from scratch (delete the checkpoint tag) or re-run it "
+        f"on the build that wrote it."
+    )
 
-    def state(self) -> dict:
-        return {"m": [np.asarray(x) for x in self.m],
-                "v": [np.asarray(x) for x in self.v], "t": self.t}
 
-    def load_state(self, state: dict) -> None:
-        self.m = [jnp.asarray(x) for x in state["m"]]
-        self.v = [jnp.asarray(x) for x in state["v"]]
-        self.t = state["t"]
+class _CategoricalPolicy:
+    """Shared v2 machinery: padded logits matrix + cached sampling CDF."""
 
-    def step(self, params, grads, clip: Optional[float] = None):
-        if clip is not None:
-            gn = jnp.sqrt(
-                sum(jnp.sum(g**2) for g in jax.tree.leaves(grads)) + 1e-12
-            )
-            scale = jnp.minimum(1.0, clip / gn)
-            grads = jax.tree.map(lambda g: g * scale, grads)
-        self.t += 1
-        self.m = jax.tree.map(lambda m, g: 0.9 * m + 0.1 * g, self.m, grads)
-        self.v = jax.tree.map(lambda v, g: 0.999 * v + 0.001 * g**2, self.v, grads)
-        bc1 = 1 - 0.9**self.t
-        bc2 = 1 - 0.999**self.t
-        return jax.tree.map(
-            lambda p, m, v: p - self.lr * (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8),
-            params, self.m, self.v,
-        )
+    def __init__(self, space: Space, seed: int):
+        self.space = space
+        self.logits, self._mask, self._arity = _pack_space(space)
+        self.rng = np.random.default_rng(seed)
+        self._cdf: Optional[np.ndarray] = None
+
+    def _set_logits(self, logits: jnp.ndarray) -> None:
+        self.logits = logits
+        self._cdf = None  # lazily rebuilt on the next sample()
+
+    def warm_start(self, offset: int, base_vec, logit: float) -> None:
+        """Pin the hot-start options (search.SearchConfig.hot_start)."""
+        idx = np.asarray(base_vec, np.int64)
+        rows = np.arange(len(idx)) + offset
+        self._set_logits(self.logits.at[rows, idx].set(logit))
+
+    def sample(self, n: int) -> np.ndarray:
+        """Draw ``n`` decision vectors with ONE generator call: inverse-CDF
+        over the per-decision categorical distributions. The (D, C_max) CDF
+        is recomputed only when the logits changed."""
+        if self._cdf is None:
+            lg = np.where(self._mask, np.asarray(self.logits, np.float64), -np.inf)
+            lg -= lg.max(axis=1, keepdims=True)
+            p = np.exp(lg)
+            cdf = np.cumsum(p, axis=1)
+            cdf /= cdf[:, -1:]  # exact 1.0 past the last live option
+            self._cdf = cdf
+        u = self.rng.random((n, len(self._arity)))
+        idx = (u[:, :, None] >= self._cdf[None, :, :]).sum(axis=2)
+        return np.minimum(idx, self._arity - 1).astype(np.int32)
+
+    def best(self) -> np.ndarray:
+        lg = np.where(self._mask, np.asarray(self.logits, np.float64), -np.inf)
+        return lg.argmax(axis=1).astype(np.int32)
+
+
+def _masked_logp_entropy(logits, maskj, vecs):
+    """Summed per-vector log-probs (n,) and total entropy over decisions."""
+    lsm = jax.nn.log_softmax(jnp.where(maskj, logits, _PAD), axis=1)
+    d = jnp.arange(logits.shape[0])
+    lp = lsm[d[None, :], vecs].sum(axis=1)
+    ent = -jnp.sum(jnp.where(maskj, jnp.exp(lsm) * lsm, 0.0))
+    return lp, ent
+
+
+def _adam_step(lg, m, v, t, g, maskj, lr, clip):
+    """One clipped Adam step on the logits matrix (padding frozen)."""
+    g = jnp.where(maskj, g, 0.0)
+    gn = jnp.sqrt(jnp.sum(g * g) + 1e-12)
+    g = g * jnp.minimum(1.0, clip / gn)
+    t = t + 1
+    m = 0.9 * m + 0.1 * g
+    v = 0.999 * v + 0.001 * g**2
+    bc1 = 1 - 0.9**t
+    bc2 = 1 - 0.999**t
+    lg = lg - lr * (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8)
+    return lg, m, v, t
 
 
 @dataclasses.dataclass
@@ -100,18 +154,49 @@ class PPOConfig:
     trials_per_sample: int = 1  # paper: reward = mean of 10 trials
 
 
-class PPOController:
+class PPOController(_CategoricalPolicy):
     def __init__(self, space: Space, cfg: PPOConfig = PPOConfig(), seed: int = 0):
-        self.space = space
+        super().__init__(space, seed)
         self.cfg = cfg
-        self.logits = _init_logits(space)
-        self.opt = _Adam(self.logits, cfg.lr)
-        self.rng = np.random.default_rng(seed)
+        self.opt_m = jnp.zeros_like(self.logits)
+        self.opt_v = jnp.zeros_like(self.logits)
+        self.opt_t = 0
         self.baseline = 0.0
         self._b_init = False
 
-    def sample(self, n: int) -> np.ndarray:
-        return _sample_batch(self.logits, self.rng, n)
+    def _update_fn(self):
+        """The fused jitted update: old log-probs + the whole epoch loop
+        (grad, clip, Adam) in one dispatch on the (D, C_max) tensor."""
+        fn = getattr(self, "_update_jit", None)
+        if fn is not None:
+            return fn
+        cfg = self.cfg
+        maskj = jnp.asarray(self._mask)
+        n_dec = self._mask.shape[0]
+
+        def loss_fn(lg, vecs, adv, old):
+            lp, ent = _masked_logp_entropy(lg, maskj, vecs)
+            ratio = jnp.exp(lp - old)
+            clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps)
+            obj = jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+            return -(obj + cfg.entropy_coef * ent / n_dec)
+
+        def update(lg, m, v, t, vecs, adv):
+            old, _ = _masked_logp_entropy(lg, maskj, vecs)
+
+            def epoch(carry, _):
+                lg, m, v, t = carry
+                g = jax.grad(loss_fn)(lg, vecs, adv, old)
+                step = _adam_step(lg, m, v, t, g, maskj, cfg.lr, cfg.grad_clip)
+                return step, None
+
+            (lg, m, v, t), _ = jax.lax.scan(
+                epoch, (lg, m, v, t), None, length=cfg.epochs
+            )
+            return lg, m, v, t
+
+        self._update_jit = jax.jit(update)
+        return self._update_jit
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
         rewards = np.asarray(rewards, np.float32)
@@ -122,47 +207,37 @@ class PPOController:
         if adv.std() > 1e-8:
             adv = adv / (adv.std() + 1e-8)
         self.baseline = 0.9 * self.baseline + 0.1 * float(rewards.mean())
-        old_lp = np.array(
-            [float(_logp(self.logits, v)) for v in vecs], np.float32
+        lg, self.opt_m, self.opt_v, self.opt_t = self._update_fn()(
+            self.logits,
+            self.opt_m,
+            self.opt_v,
+            jnp.asarray(self.opt_t, jnp.int32),
+            jnp.asarray(vecs),
+            jnp.asarray(adv),
         )
-        vecs_j = jnp.asarray(vecs)
-        adv_j = jnp.asarray(adv)
-        old_j = jnp.asarray(old_lp)
-
-        if not hasattr(self, "_grad_fn"):
-            clip_eps, ent_coef = self.cfg.clip_eps, self.cfg.entropy_coef
-
-            def loss_fn(logits, vecs_j, adv_j, old_j):
-                lps = []
-                ent = 0.0
-                for i, lg in enumerate(logits):
-                    lsm = jax.nn.log_softmax(lg)
-                    lps.append(lsm[vecs_j[:, i]])
-                    ent = ent + (-jnp.sum(jnp.exp(lsm) * lsm))
-                lp = sum(lps)
-                ratio = jnp.exp(lp - old_j)
-                clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps)
-                obj = jnp.mean(jnp.minimum(ratio * adv_j, clipped * adv_j))
-                return -(obj + ent_coef * ent / len(logits))
-
-            self._grad_fn = jax.jit(jax.grad(loss_fn))
-        for _ in range(self.cfg.epochs):
-            grads = self._grad_fn(self.logits, vecs_j, adv_j, old_j)
-            self.logits = self.opt.step(self.logits, grads,
-                                        clip=self.cfg.grad_clip)
-
-    def best(self) -> np.ndarray:
-        return np.array([int(jnp.argmax(lg)) for lg in self.logits], np.int32)
+        self._set_logits(lg)
 
     def state(self) -> dict:
-        return {"logits": [np.asarray(lg) for lg in self.logits],
-                "adam": self.opt.state(),
-                "rng": self.rng.bit_generator.state,
-                "baseline": self.baseline, "b_init": self._b_init}
+        return {
+            "version": TRAJECTORY_VERSION,
+            "logits": np.asarray(self.logits),
+            "adam": {
+                "m": np.asarray(self.opt_m),
+                "v": np.asarray(self.opt_v),
+                "t": int(self.opt_t),
+            },
+            "rng": self.rng.bit_generator.state,
+            "baseline": self.baseline,
+            "b_init": self._b_init,
+        }
 
     def load_state(self, state: dict) -> None:
-        self.logits = [jnp.asarray(lg) for lg in state["logits"]]
-        self.opt.load_state(state["adam"])
+        if state.get("version") != TRAJECTORY_VERSION:
+            raise _v1_state_error("PPOController")
+        self._set_logits(jnp.asarray(state["logits"]))
+        self.opt_m = jnp.asarray(state["adam"]["m"])
+        self.opt_v = jnp.asarray(state["adam"]["v"])
+        self.opt_t = int(state["adam"]["t"])
         self.rng.bit_generator.state = state["rng"]
         self.baseline = state["baseline"]
         self._b_init = state["b_init"]
@@ -176,18 +251,35 @@ class ReinforceConfig:
     absolute_reward: bool = True  # TuNAS |r - baseline| shaping
 
 
-class ReinforceController:
-    def __init__(self, space: Space, cfg: ReinforceConfig = ReinforceConfig(),
-                 seed: int = 0):
-        self.space = space
+class ReinforceController(_CategoricalPolicy):
+    def __init__(
+        self, space: Space, cfg: ReinforceConfig = ReinforceConfig(), seed: int = 0
+    ):
+        super().__init__(space, seed)
         self.cfg = cfg
-        self.logits = _init_logits(space)
-        self.opt = _Adam(self.logits, cfg.lr)
-        self.rng = np.random.default_rng(seed)
+        self.opt_m = jnp.zeros_like(self.logits)
+        self.opt_v = jnp.zeros_like(self.logits)
+        self.opt_t = 0
         self.baseline = None
 
-    def sample(self, n: int = 1) -> np.ndarray:
-        return _sample_batch(self.logits, self.rng, n)
+    def _update_fn(self):
+        fn = getattr(self, "_update_jit", None)
+        if fn is not None:
+            return fn
+        cfg = self.cfg
+        maskj = jnp.asarray(self._mask)
+        n_dec = self._mask.shape[0]
+
+        def loss_fn(lg, vecs, adv):
+            lp, ent = _masked_logp_entropy(lg, maskj, vecs)
+            return -(jnp.mean(lp * adv) + cfg.entropy_coef * ent / n_dec)
+
+        def update(lg, m, v, t, vecs, adv):
+            g = jax.grad(loss_fn)(lg, vecs, adv)
+            return _adam_step(lg, m, v, t, g, maskj, cfg.lr, 1.0)
+
+        self._update_jit = jax.jit(update)
+        return self._update_jit
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
         rewards = np.asarray(rewards, np.float32)
@@ -196,37 +288,39 @@ class ReinforceController:
         adv = rewards - self.baseline
         m = self.cfg.baseline_momentum
         self.baseline = m * self.baseline + (1 - m) * float(rewards.mean())
-        vecs_j = jnp.asarray(vecs)
-        adv_j = jnp.asarray(adv)
+        lg, self.opt_m, self.opt_v, self.opt_t = self._update_fn()(
+            self.logits,
+            self.opt_m,
+            self.opt_v,
+            jnp.asarray(self.opt_t, jnp.int32),
+            jnp.asarray(vecs),
+            jnp.asarray(adv),
+        )
+        self._set_logits(lg)
 
-        if not hasattr(self, "_grad_fn"):
-            ent_coef = self.cfg.entropy_coef
-
-            def loss_fn(logits, vecs_j, adv_j):
-                lp = 0.0
-                ent = 0.0
-                for i, lg in enumerate(logits):
-                    lsm = jax.nn.log_softmax(lg)
-                    lp = lp + lsm[vecs_j[:, i]]
-                    ent = ent + (-jnp.sum(jnp.exp(lsm) * lsm))
-                return -(jnp.mean(lp * adv_j) + ent_coef * ent / len(logits))
-
-            self._grad_fn = jax.jit(jax.grad(loss_fn))
-        grads = self._grad_fn(self.logits, vecs_j, adv_j)
-        self.logits = self.opt.step(self.logits, grads, clip=1.0)
-
-    def best(self) -> np.ndarray:
-        return np.array([int(jnp.argmax(lg)) for lg in self.logits], np.int32)
+    def sample(self, n: int = 1) -> np.ndarray:
+        return super().sample(n)
 
     def state(self) -> dict:
-        return {"logits": [np.asarray(lg) for lg in self.logits],
-                "adam": self.opt.state(),
-                "rng": self.rng.bit_generator.state,
-                "baseline": self.baseline}
+        return {
+            "version": TRAJECTORY_VERSION,
+            "logits": np.asarray(self.logits),
+            "adam": {
+                "m": np.asarray(self.opt_m),
+                "v": np.asarray(self.opt_v),
+                "t": int(self.opt_t),
+            },
+            "rng": self.rng.bit_generator.state,
+            "baseline": self.baseline,
+        }
 
     def load_state(self, state: dict) -> None:
-        self.logits = [jnp.asarray(lg) for lg in state["logits"]]
-        self.opt.load_state(state["adam"])
+        if state.get("version") != TRAJECTORY_VERSION:
+            raise _v1_state_error("ReinforceController")
+        self._set_logits(jnp.asarray(state["logits"]))
+        self.opt_m = jnp.asarray(state["adam"]["m"])
+        self.opt_v = jnp.asarray(state["adam"]["v"])
+        self.opt_t = int(state["adam"]["t"])
         self.rng.bit_generator.state = state["rng"]
         self.baseline = state["baseline"]
 
@@ -241,8 +335,9 @@ class EvolutionConfig:
 class EvolutionController:
     """Regularized evolution (ablation baseline)."""
 
-    def __init__(self, space: Space, cfg: EvolutionConfig = EvolutionConfig(),
-                 seed: int = 0):
+    def __init__(
+        self, space: Space, cfg: EvolutionConfig = EvolutionConfig(), seed: int = 0
+    ):
         self.space = space
         self.cfg = cfg
         self.rng = np.random.default_rng(seed)
@@ -254,12 +349,11 @@ class EvolutionController:
             if len(self.population) < self.cfg.population:
                 out.append(self.space.sample(self.rng))
             else:
-                idx = self.rng.choice(len(self.population),
-                                      size=self.cfg.tournament, replace=False)
-                parent = max((self.population[i] for i in idx),
-                             key=lambda t: t[1])[0]
-                out.append(self.space.mutate(parent, self.rng,
-                                             self.cfg.mutate_rate))
+                idx = self.rng.choice(
+                    len(self.population), size=self.cfg.tournament, replace=False
+                )
+                parent = max((self.population[i] for i in idx), key=lambda t: t[1])[0]
+                out.append(self.space.mutate(parent, self.rng, self.cfg.mutate_rate))
         return np.stack(out)
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
@@ -272,13 +366,14 @@ class EvolutionController:
         return max(self.population, key=lambda t: t[1])[0]
 
     def state(self) -> dict:
-        return {"rng": self.rng.bit_generator.state,
-                "population": [(np.asarray(v), r) for v, r in self.population]}
+        return {
+            "rng": self.rng.bit_generator.state,
+            "population": [(np.asarray(v), r) for v, r in self.population],
+        }
 
     def load_state(self, state: dict) -> None:
         self.rng.bit_generator.state = state["rng"]
-        self.population = [(np.asarray(v), float(r))
-                           for v, r in state["population"]]
+        self.population = [(np.asarray(v), float(r)) for v, r in state["population"]]
 
 
 CONTROLLERS = {

@@ -9,6 +9,16 @@ the paper's weighted-product reward (Eq. 4-6), and memoizes the finished
 records in a content-addressed cache keyed on the encoded (α, h) vector —
 repeated samples (common under PPO late in search) are free.
 
+The per-batch loop is columnar end to end: store keys come from one
+``tobytes`` pass over the batch (``_vec_keys``), accuracies from one
+``acc_fn.batch`` call over the valid candidates, hardware columns from the
+shared memoized ``simulator.hw_matrix``, and objective scoring from one
+``score_batch`` pass — per-candidate dicts materialize only at the
+store/record boundary, so the record format, cache keys, and store
+namespace tokens are bit-for-bit those of the original per-candidate loop
+(asserted by the engine tests; ``benchmarks/search_loop_bench.py`` measures
+the loop).
+
 Modes (inferred from the constructor arguments):
   * joint     — ``nas_space`` + ``has_space``: vec = [α ++ h]  (joint_search)
   * nas-only  — ``nas_space`` + ``fixed_h``:   vec = α         (fixed_hw_search)
@@ -370,40 +380,52 @@ class EvaluationEngine:
     def evaluate_batch(self, vecs: Sequence[np.ndarray]) -> list[dict]:
         """Evaluate a controller batch; returns one fresh record dict per vec
         (cached raw metrics are re-scored under the current objective on every
-        lookup, so callers may mutate the returned records freely)."""
+        lookup, so callers may mutate the returned records freely).
+
+        The loop is columnar: store keys for the whole batch come from one
+        ``tobytes`` pass, cache-missing candidates run through the backend
+        and the batched accuracy signal as columns, and scoring happens once
+        for the whole batch (``score_batch``); per-candidate dicts only
+        materialize at the store/record boundary, so the record format and
+        the content-addressed keys are unchanged from the per-candidate
+        loop."""
         vecs = np.asarray(vecs)
         self.stats.batches += 1
         self.stats.requested += len(vecs)
-        out: list = [None] * len(vecs)
+        n = len(vecs)
+        if n == 0:
+            return []
+        raws: list = [None] * n
+        dup_of: dict[int, int] = {}
         missing: list[int] = []
+        keys: Optional[list[bytes]] = None
         if self.store is None:
-            missing = list(range(len(vecs)))
+            missing = list(range(n))
         else:
             # duplicates WITHIN the batch also collapse: only the first
             # occurrence of a key is evaluated, the rest fan out below
+            keys = self._vec_keys(vecs)
             pending: dict[bytes, int] = {}
-            for i, v in enumerate(vecs):
-                k = self._vec_key(v)
+            for i, k in enumerate(keys):
                 raw = self._lookup(k)
                 if raw is not None:
                     self.stats.cache_hits += 1
-                    out[i] = self.score(raw)
+                    raws[i] = raw
                 elif k in pending:
                     self.stats.cache_hits += 1
-                    out[i] = pending[k]  # index placeholder, resolved below
+                    dup_of[i] = pending[k]
                 else:
                     pending[k] = i
                     missing.append(i)
         if missing:
-            raws = self._evaluate_candidates([vecs[i] for i in missing])
-            for i, raw in zip(missing, raws):
-                self._insert(self._vec_key(vecs[i]), raw)
-                out[i] = self.score(raw)
-        # resolve within-batch duplicate placeholders into fresh copies
-        for i, r in enumerate(out):
-            if isinstance(r, int):
-                out[i] = dict(out[r])
-        return out
+            fresh = self._evaluate_candidates([vecs[i] for i in missing])
+            for i, raw in zip(missing, fresh):
+                if keys is not None:
+                    self._insert(keys[i], raw)
+                raws[i] = raw
+        for i, j in dup_of.items():
+            raws[i] = raws[j]
+        return self.score_batch(raws)
 
     def evaluate_looped(self, vecs: Sequence[np.ndarray]) -> list[dict]:
         """Reference implementation: the legacy per-candidate loop
@@ -476,10 +498,71 @@ class EvaluationEngine:
                                             self.constraint_mode)
         return rec
 
+    def score_batch(self, raws: Sequence[Optional[dict]]) -> list[dict]:
+        """Columnar ``score`` over a batch: the metrics are pulled into
+        struct-of-arrays columns once, the feasibility bits run as one numpy
+        comparison pass, and fresh per-candidate dicts materialize only at
+        the end. The Eq. 4-6 weighted product itself stays on the scalar
+        path (``reward_record``) — numpy's SIMD ``pow`` can differ from
+        libm's by one ulp, and ``score_batch`` must stay bitwise-identical
+        to ``[self.score(r) for r in raws]`` (asserted by the engine
+        tests)."""
+        n = len(raws)
+        if n == 0:
+            return []
+        rcfg = self.rcfg
+        valid = np.zeros(n, bool)
+        lat = np.ones(n)
+        energy = np.ones(n)
+        area = np.ones(n)
+        has_energy = np.ones(n, bool)
+        for i, raw in enumerate(raws):
+            if raw is not None and raw.get("valid", False):
+                valid[i] = True
+                lat[i] = raw["latency_ms"]
+                area[i] = raw["area_mm2"]
+                e = raw.get("energy_mj")
+                if e is None:
+                    has_energy[i] = False
+                else:
+                    energy[i] = e
+        if rcfg.energy_target_mj is not None:
+            perf_ok = (energy <= rcfg.energy_target_mj) & has_energy
+        else:
+            perf_ok = lat <= rcfg.latency_target_ms
+        area_ok = area <= rcfg.area_target_mm2
+        if self.constraint_mode == "area_only":
+            meets = area_ok
+        else:
+            meets = perf_ok & area_ok
+        out: list = [None] * n
+        for i, raw in enumerate(raws):
+            if not valid[i]:
+                out[i] = {
+                    "valid": False, "reward": rcfg.invalid_reward,
+                    "accuracy": 0.0, "latency_ms": None, "energy_mj": None,
+                    "area_mm2": None,
+                }
+                continue
+            rec = dict(raw)
+            rec["reward"] = float(reward_record(raw, rcfg))
+            rec["meets_constraints"] = bool(meets[i])
+            out[i] = rec
+        return out
+
     # ---- internals --------------------------------------------------------
 
     def _vec_key(self, vec: np.ndarray) -> bytes:
         return self._ns + _key(vec)
+
+    def _vec_keys(self, vecs: np.ndarray) -> list[bytes]:
+        """Store keys for a whole batch from ONE ``tobytes`` pass (row ``i``
+        slices to exactly ``_vec_key(vecs[i])`` — same bytes, same keys)."""
+        V = np.ascontiguousarray(vecs, dtype=np.int64)
+        raw = V.tobytes()
+        w = V.shape[1] * 8
+        ns = self._ns
+        return [ns + raw[i * w:(i + 1) * w] for i in range(V.shape[0])]
 
     def _lookup(self, k: bytes) -> Optional[dict]:
         return None if self.store is None else \
@@ -512,16 +595,19 @@ class EvaluationEngine:
         return [self.fixed_spec] * len(vecs), \
             self.has_space.decode_batch(vecs)
 
-    def _raw(self, sim: Optional[dict], spec) -> dict:
+    def _raw(self, sim: Optional[dict], spec, acc=None) -> dict:
         """One *raw* (objective-independent) metric record — the unit the
         cache/store memoizes. No reward, no feasibility: those are recomputed
         by ``score`` under whatever objective the engine holds at lookup
-        time. Pure — stats are counted by evaluate_batch/_evaluate_candidates
-        only, so the reference paths (evaluate_looped/evaluate_decoded) don't
-        skew the engine's counters."""
+        time. ``acc`` carries a precomputed accuracy (the batched path scores
+        the whole batch in one ``acc_fn.batch`` call). Pure — stats are
+        counted by evaluate_batch/_evaluate_candidates only, so the reference
+        paths (evaluate_looped/evaluate_decoded) don't skew the engine's
+        counters."""
         if sim is None:
             return {"valid": False}
-        acc = self.fixed_acc if self.mode == "has" else self.acc_fn(spec)
+        if acc is None:
+            acc = self.fixed_acc if self.mode == "has" else self.acc_fn(spec)
         energy = sim["energy_mj"]
         rec = {
             "valid": True, "accuracy": float(acc),
@@ -562,7 +648,23 @@ class EvaluationEngine:
         )
         sims = hm.records
         self.stats.invalid += sum(1 for s in sims if s is None)
-        return [self._raw(sim, spec) for sim, spec in zip(sims, specs)]
+        # columnar accuracy: ONE batch call over the specs that simulated
+        # valid (invalid candidates never consume the accuracy signal —
+        # same as the per-candidate path)
+        acc_of: dict[int, float] = {}
+        if self.mode != "has":
+            live = [i for i, s in enumerate(sims) if s is not None]
+            if live:
+                # callable() matters: TrainedAccuracy carries an *int* field
+                # named ``batch`` (its training batch size), not a batch API
+                batch_fn = getattr(self.acc_fn, "batch", None)
+                if callable(batch_fn):
+                    vals = batch_fn([specs[i] for i in live])
+                else:
+                    vals = [self.acc_fn(specs[i]) for i in live]
+                acc_of = dict(zip(live, vals))
+        return [self._raw(sim, spec, acc=acc_of.get(i))
+                for i, (sim, spec) in enumerate(zip(sims, specs))]
 
 
 class CallableEngine:

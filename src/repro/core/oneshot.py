@@ -19,6 +19,12 @@ Per the paper's own finding, oneshot targets the *small-model* regime: it
 shares kernel/expansion/op decisions and leaves filter-multiplier/groups to
 the multi-trial path ("constructing a super-network … impractically too
 expensive when the search space is larger").
+
+The controller side rides the trajectory-v2 vectorized REINFORCE
+(``repro.core.controllers``): ``ctrl.sample``/``ctrl.update`` are one RNG
+draw and one fused jitted call per step, so the search overhead between
+supernet train steps is a couple of dispatches rather than O(D) — the
+warmup's uniform draws (``joint.sample``) are unchanged.
 """
 from __future__ import annotations
 

@@ -11,16 +11,25 @@ Two paths, both implemented (DESIGN.md §2):
   feasible as real ImageNet trainings in this container — the paper itself
   needed thousands of accelerator-days for those).
 
+  ``batch(specs)`` is the search hot path: flops/params come from the
+  cached ``simulator.layer_matrix`` scalars (one bounded memo shared with
+  the batched simulator) and the accuracy terms are computed as one numpy
+  pass over the batch — bitwise-identical to the per-spec reference
+  formula (``_reference``), hash-seeded noise included, which is what
+  keeps records stable across the scalar and batched paths.
+
 * ``TrainedAccuracy`` — a *real* proxy task: train the candidate on the
   synthetic vision stream for a few hundred steps and measure held-out
   accuracy (the paper's 5-epoch proxy-task pattern). Used by the tiny-space
   end-to-end example and the integration tests.
 
 * ``CachedAccuracy`` — a memoizing wrapper for either signal, keyed on the
-  (frozen, hashable) ``ConvNetSpec``. The ``EvaluationEngine`` caches whole
-  records by encoded vector; this wrapper additionally collapses *distinct*
-  vectors that decode to the same architecture (common in the evolved space,
-  where infeasible group counts fall back to ``groups=1``).
+  (frozen, hashable) ``ConvNetSpec``, with FIFO eviction at the size cap
+  and a one-dict-pass ``batch`` API that fans misses out to the wrapped
+  signal's own ``batch`` when it has one. The ``EvaluationEngine`` caches
+  whole records by encoded vector; this wrapper additionally collapses
+  *distinct* vectors that decode to the same architecture (common in the
+  evolved space, where infeasible group counts fall back to ``groups=1``).
 
 Every benchmark labels which signal produced its numbers.
 """
@@ -33,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import FifoDict
+from repro.core import simulator
 from repro.data.synthetic import VisionStream
 from repro.models import convnets as C
 
@@ -45,12 +56,77 @@ def _spec_hash(spec: C.ConvNetSpec) -> int:
     return int(hashlib.sha256(s).hexdigest()[:8], 16)
 
 
+# spec -> (gflops, params_m), derived from the cached (9, L) layer matrix.
+# Exact small integers in float64 (< 2^53), so the sums — and therefore the
+# accuracy formula downstream — are bitwise-equal to the integer
+# ``convnets.count_flops`` / ``count_params`` loops.
+_FP_CACHE: FifoDict = FifoDict(65536)
+
+
+def _flops_params(spec: C.ConvNetSpec) -> tuple[float, float]:
+    s = _FP_CACHE.get(spec)
+    if s is not None:
+        return s
+    m = simulator.layer_matrix(spec)
+    is_dw = m[0] != 0.0
+    cin, cout, k, grp, out_hw = m[3], m[4], m[5], m[7], m[8]
+    k2 = k * k
+    fl = np.where(
+        is_dw,
+        2.0 * out_hw * cout * k2,
+        np.floor_divide(2.0 * out_hw * cout * k2 * cin, grp),
+    ).sum()
+    pb = np.where(is_dw, k2 * cout, k2 * np.floor_divide(cin, grp) * cout).sum()
+    s = (float(fl) / 1e9, float(pb) / 1e6)
+    _FP_CACHE[spec] = s
+    return s
+
+
 @dataclasses.dataclass
 class SurrogateAccuracy:
     noise_pct: float = 0.12
     se_swish_bonus: float = 0.55  # Table 3: MobilenetV3 w SE vs similar capacity
 
     def __call__(self, spec: C.ConvNetSpec) -> float:
+        return self.batch([spec])[0]
+
+    def batch(self, specs: list) -> list[float]:
+        """Vectorized scoring of a spec batch (see module docstring). One
+        numpy pass over the batch for the analytic terms; the hash-seeded
+        per-spec noise draw is preserved bitwise."""
+        n = len(specs)
+        if n == 0:
+            return []
+        gflops = np.empty(n)
+        params_m = np.empty(n)
+        se = np.zeros(n)
+        swish = np.zeros(n)
+        ks_div = np.empty(n)
+        noise = np.empty(n)
+        for i, spec in enumerate(specs):
+            gflops[i], params_m[i] = _flops_params(spec)
+            if any(blk.se for blk in spec.blocks):
+                se[i] = self.se_swish_bonus * 0.6
+            if any(blk.act == "swish" for blk in spec.blocks):
+                swish[i] = self.se_swish_bonus * 0.4
+            ks = {blk.kernel for blk in spec.blocks}
+            ks_div[i] = 0.1 * (len(ks) - 1)
+            rng = np.random.default_rng(_spec_hash(spec))
+            noise[i] = rng.normal(0.0, self.noise_pct)
+        # one addition per term, in _reference's order — float addition is
+        # order-sensitive, and a conditional term that adds 0.0 is a
+        # bitwise no-op, so the two paths agree bit for bit
+        acc = _A - _B * np.maximum(gflops, 0.05) ** (-_G)
+        acc = acc + (0.35 * np.log1p(params_m) - 0.35 * np.log1p(5.3))
+        acc = acc + se
+        acc = acc + swish
+        acc = acc + ks_div
+        acc = acc + noise
+        return [float(a) / 100.0 for a in np.clip(acc, 1.0, 99.0)]
+
+    def _reference(self, spec: C.ConvNetSpec) -> float:
+        """The original per-spec formula, kept as the bitwise reference the
+        vectorized ``batch`` is tested against (tests/test_search_loop.py)."""
         gflops = C.count_flops(spec) / 1e9
         params_m = C.count_params(spec) / 1e6
         acc = _A - _B * max(gflops, 0.05) ** (-_G)
@@ -72,7 +148,8 @@ class CachedAccuracy:
 
     The underlying signal must be deterministic per spec — true for both
     ``SurrogateAccuracy`` (hash-seeded noise) and ``TrainedAccuracy`` (fixed
-    training seed).
+    training seed). The cache evicts FIFO at ``max_entries`` instead of
+    clearing wholesale.
     """
 
     def __init__(self, fn, max_entries: int = 1_000_000):
@@ -80,7 +157,7 @@ class CachedAccuracy:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
-        self._cache: dict = {}
+        self._cache: FifoDict = FifoDict(max_entries)
 
     def __call__(self, spec: C.ConvNetSpec) -> float:
         acc = self._cache.get(spec)
@@ -89,10 +166,41 @@ class CachedAccuracy:
             return acc
         self.misses += 1
         acc = self.fn(spec)
-        if len(self._cache) >= self.max_entries:
-            self._cache.clear()
         self._cache[spec] = acc
         return acc
+
+    def batch(self, specs: list) -> list[float]:
+        """One dict pass over the batch: cache hits fan out, in-batch
+        duplicates collapse, and the misses go to the wrapped signal's own
+        ``batch`` (one vectorized call) when it provides one."""
+        out: list = [None] * len(specs)
+        first: dict = {}
+        missing: list[int] = []
+        dups: list[int] = []
+        for i, spec in enumerate(specs):
+            acc = self._cache.get(spec)
+            if acc is not None:
+                self.hits += 1
+                out[i] = acc
+            elif spec in first:
+                self.hits += 1
+                dups.append(i)
+            else:
+                first[spec] = i
+                missing.append(i)
+                self.misses += 1
+        if missing:
+            todo = [specs[i] for i in missing]
+            # callable() matters: TrainedAccuracy has an *int* field named
+            # ``batch`` (its training batch size), not a batch API
+            fb = getattr(self.fn, "batch", None)
+            accs = fb(todo) if callable(fb) else [self.fn(s) for s in todo]
+            for i, acc in zip(missing, accs):
+                self._cache[specs[i]] = acc
+                out[i] = acc
+        for i in dups:
+            out[i] = out[first[specs[i]]]
+        return out
 
 
 @dataclasses.dataclass
@@ -114,8 +222,10 @@ class TrainedAccuracy:
         rng = jax.random.PRNGKey(self.seed)
         params = C.init(rng, spec)
         stream = VisionStream(
-            image_size=self.image_size, num_classes=self.num_classes,
-            batch=self.batch, seed=self.seed,
+            image_size=self.image_size,
+            num_classes=self.num_classes,
+            batch=self.batch,
+            seed=self.seed,
         )
 
         def loss_fn(p, images, labels):
@@ -132,8 +242,9 @@ class TrainedAccuracy:
 
         for i in range(self.steps):
             b = stream.batch_at(i)
-            params, loss = step(params, jnp.asarray(b["images"]),
-                                jnp.asarray(b["labels"]))
+            params, loss = step(
+                params, jnp.asarray(b["images"]), jnp.asarray(b["labels"])
+            )
 
         @jax.jit
         def acc_of(p, images, labels):
@@ -143,6 +254,9 @@ class TrainedAccuracy:
         accs = []
         for i in range(self.eval_batches):
             b = stream.batch_at(10_000 + i)
-            accs.append(float(acc_of(params, jnp.asarray(b["images"]),
-                                     jnp.asarray(b["labels"]))))
+            accs.append(
+                float(
+                    acc_of(params, jnp.asarray(b["images"]), jnp.asarray(b["labels"]))
+                )
+            )
         return float(np.mean(accs))

@@ -40,7 +40,10 @@ With a checkpointer attached, ``_drive`` persists controller state, history
 and progress at every batch boundary; re-running the same driver call with
 the same ``tag`` resumes mid-search and reproduces the *bitwise-identical*
 remaining trajectory (controllers snapshot their RNG + optimizer state — see
-``controllers``). A completed search's checkpoint doubles as a result cache:
+``controllers``; the snapshot carries the sampler's trajectory version, and
+resuming a checkpoint written by the retired v1 per-draw sampler fails with
+a clear error instead of silently diverging). A completed search's
+checkpoint doubles as a result cache:
 re-running it replays the finished ``SearchResult`` without evaluating
 anything. When the runtime's budget/stop-token denies the next batch,
 drivers checkpoint and raise ``SearchInterrupted``.
@@ -156,11 +159,8 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
            warm_has=None, scenario: Optional[Scenario] = None,
            runtime=None, tag: str = "search") -> SearchResult:
     ctrl = CONTROLLERS[cfg.controller](space, seed=cfg.seed)
-    if warm_has is not None and hasattr(ctrl, "logits"):
-        offset, base_vec, logit = warm_has
-        for i, v in enumerate(base_vec):
-            lg = ctrl.logits[offset + i]
-            ctrl.logits[offset + i] = lg.at[int(v)].set(logit)
+    if warm_has is not None and hasattr(ctrl, "warm_start"):
+        ctrl.warm_start(*warm_has)
     history = []
     best = None
     best_vec = None
@@ -168,6 +168,7 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
     wall_base = 0.0
     ck = getattr(runtime, "checkpoint", None) if runtime is not None else None
     every = max(int(getattr(runtime, "checkpoint_every", 1) or 1), 1)
+    replay = False
     if ck is not None:
         state = ck.load(tag)
         if state is not None:
@@ -182,13 +183,20 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
                     f"checkpoint {tag!r} was written by a different search "
                     f"({got} != {want}); refusing to resume"
                 )
-            ctrl.load_state(state["controller"])
             history = list(state["history"])
             n = state["samples_done"]
             best = state["best_record"]
             best_vec = (None if state["best_vec"] is None
                         else np.asarray(state["best_vec"]))
             wall_base = state.get("wall_s", 0.0)
+            # a COMPLETED checkpoint is a pure result cache: the controller
+            # state is never consulted again, so skip restoring it — which
+            # also lets finished searches from older sampler generations
+            # (trajectory v1) keep replaying, while a mid-search v1
+            # checkpoint is rejected by load_state below
+            replay = n >= cfg.samples
+            if not replay:
+                ctrl.load_state(state["controller"])
     t0 = time.monotonic()
 
     def save():
@@ -242,7 +250,7 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
         batches += 1
         if ck is not None and batches % every == 0:
             save()
-    if ck is not None:
+    if ck is not None and not replay:
         save()  # final state: doubles as the completed-search result cache
     # fall back to best-by-reward if nothing met the constraints
     if best is None:

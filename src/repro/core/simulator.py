@@ -38,6 +38,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.common import FifoDict
 from repro.core.has import AcceleratorConfig
 from repro.models.convnets import ConvNetSpec, block_rows, layer_ops
 
@@ -222,8 +223,37 @@ def simulate_safe(spec: ConvNetSpec, h: AcceleratorConfig, batch: int = 1):
 # per-candidate path builds in ``_layer_arrays``.
 _ROW = {"is_dw": 0, "h": 1, "w": 2, "cin": 3, "cout": 4, "k": 5,
         "stride": 6, "groups": 7, "out_hw": 8}
-_MATRIX_CACHE: dict = {}
-_SEG_CACHE: dict = {}  # (block, cin, size) / stem / head -> (9, k) segment
+# FIFO-bounded memos (repro.common.FifoDict): at the cap the oldest entry is
+# shed instead of dumping the whole working set
+_MATRIX_CACHE: FifoDict = FifoDict(65536)
+_SEG_CACHE: FifoDict = FifoDict(262144)  # (block, cin, size) -> (9, k) segment
+
+
+# ---------------------------------------------------------------------------
+# Hardware columns (shared by every batched entry point)
+# ---------------------------------------------------------------------------
+# Per-candidate hardware columns
+#   [pes_x, pes_y, simd_units, compute_lanes, simd_width,
+#    register_file_kb, io_bandwidth_gbps, frequency_ghz, local_memory_mb]
+# as one (N, 9) float64 matrix. The attribute→row conversion is memoized per
+# (frozen, hashable) AcceleratorConfig, so the cost of lowering a config is
+# paid once and shared across backends — e.g. the cascade's lower-bound pass
+# and the analytic refine pass read the same rows.
+_HW_ROW_CACHE: FifoDict = FifoDict(65536)
+
+
+def hw_matrix(hs: list) -> np.ndarray:
+    """(N, 9) float64 hardware-column matrix for ``hs`` (see above)."""
+    rows = []
+    for h in hs:
+        r = _HW_ROW_CACHE.get(h)
+        if r is None:
+            r = (h.pes_x, h.pes_y, h.simd_units, h.compute_lanes,
+                 h.simd_width, h.register_file_kb, h.io_bandwidth_gbps,
+                 h.frequency_ghz, h.local_memory_mb)
+            _HW_ROW_CACHE[h] = r
+        rows.append(r)
+    return np.array(rows, np.float64).reshape(len(hs), 9)
 
 
 def _np_seg(flat: list) -> np.ndarray:
@@ -270,9 +300,6 @@ def layer_matrix(spec: ConvNetSpec) -> np.ndarray:
         _SEG_CACHE[key] = s
     segs.append(s)
     m = np.concatenate(segs, axis=1)
-    if len(_MATRIX_CACHE) > 65536:
-        _MATRIX_CACHE.clear()
-        _SEG_CACHE.clear()
     _MATRIX_CACHE[spec] = m
     return m
 
@@ -296,7 +323,7 @@ def model_weight_bytes(spec: ConvNetSpec) -> float:
 # contributions: ceil-tiling slack, per-layer max vs sum-of-max, weight
 # re-streaming passes, per-layer activation spill vs aggregate spill), so a
 # candidate whose bound already violates a cap is guaranteed infeasible.
-_BOUND_CACHE: dict = {}
+_BOUND_CACHE: FifoDict = FifoDict(65536)
 
 
 def bound_scalars(spec: ConvNetSpec) -> tuple:
@@ -315,8 +342,6 @@ def bound_scalars(spec: ConvNetSpec) -> tuple:
                         k2 * np.floor_divide(cin, grp) * cout).sum())
     act = float((h_ * w_ * cin + out_hw * cout).sum())
     s = (macs, wb, act, m.shape[1])
-    if len(_BOUND_CACHE) > 65536:
-        _BOUND_CACHE.clear()
     _BOUND_CACHE[spec] = s
     return s
 
@@ -337,13 +362,7 @@ def lower_bounds(specs: list, hs: list, batch: int = 1) -> dict:
     ``simulate`` outputs for every candidate, valid or not.
     """
     n = len(specs)
-    hw = np.array(
-        [(h.pes_x, h.pes_y, h.simd_units, h.compute_lanes, h.simd_width,
-          h.register_file_kb, h.io_bandwidth_gbps, h.frequency_ghz,
-          h.local_memory_mb)
-         for h in hs],
-        np.float64,
-    ).reshape(n, 9)
+    hw = hw_matrix(hs)
     sb = np.array([bound_scalars(s) for s in specs], np.float64).reshape(n, 4)
     macs = sb[:, 0] * batch
     wsum = sb[:, 1]
@@ -423,16 +442,11 @@ def simulate_batch(
         return []
     results: list = [None] * n
 
-    # per-candidate hardware columns; derived quantities are computed in
-    # numpy with the same expressions (and order) as the AcceleratorConfig
-    # properties, so values are bitwise-identical to the per-candidate path
-    hw = np.array(
-        [(h.pes_x, h.pes_y, h.simd_units, h.compute_lanes, h.simd_width,
-          h.register_file_kb, h.io_bandwidth_gbps, h.frequency_ghz,
-          h.local_memory_mb)
-         for h in hs],
-        np.float64,
-    )
+    # per-candidate hardware columns (hw_matrix, memoized per config);
+    # derived quantities are computed in numpy with the same expressions
+    # (and order) as the AcceleratorConfig properties, so values are
+    # bitwise-identical to the per-candidate path
+    hw = hw_matrix(hs)
     pes_x, pes_y = hw[:, 0], hw[:, 1]
     simd_units, lanes_per_pe, simd_width = hw[:, 2], hw[:, 3], hw[:, 4]
     rf_kb, io_gbps = hw[:, 5], hw[:, 6]

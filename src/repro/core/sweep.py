@@ -24,6 +24,12 @@ scenario A discovered (the semi-decoupled pattern of Lu et al. 2022).
 
 ``scripts/sweep.py`` is the CLI; ``benchmarks/sweep_bench.py`` reproduces the
 use-case-divergence result as a table of best configs per scenario.
+
+The sweep rides the vectorized search hot path end to end (trajectory v2:
+batched controller sampling + fused updates, one ``CachedAccuracy.batch``
+pass per engine batch, columnar engine loop) — a quick 6-scenario sweep is
+simulator-bound rather than Python-dispatch-bound; see
+``benchmarks/search_loop_bench.py`` / ``BENCH_search_loop.json``.
 """
 from __future__ import annotations
 

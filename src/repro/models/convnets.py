@@ -18,7 +18,7 @@ from dataclasses import dataclass, replace
 import jax
 import jax.numpy as jnp
 
-from repro.common import dtype_of, fold_rng
+from repro.common import FifoDict, dtype_of, fold_rng
 
 # ---------------------------------------------------------------------------
 # Specs
@@ -285,7 +285,7 @@ class LayerOp:
     groups: int = 1
 
 
-_LAYER_OPS_CACHE: dict = {}
+_LAYER_OPS_CACHE: FifoDict = FifoDict(4096)
 
 
 def layer_ops(spec: ConvNetSpec) -> list[LayerOp]:
@@ -294,8 +294,6 @@ def layer_ops(spec: ConvNetSpec) -> list[LayerOp]:
     if hit is not None:
         return hit
     out = _layer_ops_impl(spec)
-    if len(_LAYER_OPS_CACHE) > 4096:
-        _LAYER_OPS_CACHE.clear()
     _LAYER_OPS_CACHE[key] = out
     return out
 

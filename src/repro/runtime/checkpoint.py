@@ -8,7 +8,12 @@ kill mid-save never corrupts the previous checkpoint. The search drivers
 * controller state — policy logits, Adam moments, RNG bit-generator state,
   reward baselines (``controllers.*.state()``; numpy/python only, restored
   bitwise, which is what makes the resumed trajectory identical to an
-  uninterrupted run);
+  uninterrupted run). The snapshot carries the sampler's trajectory version
+  (``controllers.TRAJECTORY_VERSION``); ``load_state`` refuses snapshots
+  from a different sampler generation (e.g. pre-vectorization v1
+  checkpoints), so a mid-search resume can never silently diverge across
+  versions. A *completed* checkpoint replays without consulting controller
+  state at all, so finished results from older generations stay servable;
 * progress — samples done, accumulated history (every evaluated record),
   the best record/vector so far, wall-clock so far;
 * identity metadata — space, controller, seed, sample budget, scenario —

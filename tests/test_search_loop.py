@@ -1,0 +1,276 @@
+"""Trajectory v2 (vectorized search hot path) contract:
+
+* same-seed determinism across controllers under the vectorized sampler;
+* ``state()``/``load_state()`` bitwise round-trip (resumed trajectories are
+  identical to uninterrupted ones);
+* resume validation rejects trajectory-v1 checkpoints with a clear error;
+* the dispatch-count guard: batch sampling makes O(1) RNG calls per batch,
+  not O(n·D);
+* the batched accuracy path is bitwise-identical to the per-spec reference
+  formula, and ``CachedAccuracy.batch`` collapses duplicates in one pass;
+* ``score_batch`` is bitwise-identical to per-record ``score``;
+* the shared FIFO cache helper evicts oldest-first instead of clearing.
+"""
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.common import FifoDict
+from repro.core import controllers, has, nas, proxy, scenarios, search
+from repro.core.engine import EvaluationEngine
+from repro.core.search import SearchConfig
+from repro.core.space import concat
+
+SC = scenarios.get("lat-0.3ms")
+
+
+def _space():
+    return concat(nas.tiny_space(), has.has_space())
+
+
+def _drive_controller(ctrl, batches=4, batch=8, seed_rewards=7):
+    """Deterministic sample/update episodes; returns the sampled stream."""
+    rng = np.random.default_rng(seed_rewards)
+    out = []
+    for _ in range(batches):
+        vecs = ctrl.sample(batch)
+        out.append(np.array(vecs))
+        ctrl.update(vecs, rng.random(batch))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# determinism + state round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["ppo", "reinforce", "evolution"])
+def test_same_seed_controllers_are_deterministic(name):
+    sp = _space()
+    a = controllers.CONTROLLERS[name](sp, seed=5)
+    b = controllers.CONTROLLERS[name](sp, seed=5)
+    for va, vb in zip(_drive_controller(a), _drive_controller(b)):
+        assert (va == vb).all()
+    assert (np.asarray(a.best()) == np.asarray(b.best())).all()
+
+
+@pytest.mark.parametrize("name", ["ppo", "reinforce"])
+def test_state_roundtrip_is_bitwise_under_vectorized_sampler(name):
+    sp = _space()
+    ref = controllers.CONTROLLERS[name](sp, seed=1)
+    cut = controllers.CONTROLLERS[name](sp, seed=1)
+    _drive_controller(ref, batches=2)
+    _drive_controller(cut, batches=2)
+    snap = pickle.loads(pickle.dumps(cut.state()))  # checkpoint-shaped copy
+    assert snap["version"] == controllers.TRAJECTORY_VERSION
+
+    resumed = controllers.CONTROLLERS[name](sp, seed=999)  # wrong seed on purpose
+    resumed.load_state(snap)
+    tail_ref = _drive_controller(ref, batches=3, seed_rewards=11)
+    tail_res = _drive_controller(resumed, batches=3, seed_rewards=11)
+    for va, vb in zip(tail_ref, tail_res):
+        assert (va == vb).all()
+    assert (np.asarray(ref.logits) == np.asarray(resumed.logits)).all()
+    assert ref.state()["rng"] == resumed.state()["rng"]
+
+
+@pytest.mark.parametrize("name", ["ppo", "reinforce"])
+def test_v1_checkpoint_is_rejected(name):
+    sp = _space()
+    ctrl = controllers.CONTROLLERS[name](sp, seed=0)
+    v1_state = {  # the pre-v2 snapshot shape: ragged logits list, no version
+        "logits": [np.zeros(len(c), np.float32) for c in sp.choices],
+        "adam": {"m": [], "v": [], "t": 0},
+        "rng": np.random.default_rng(0).bit_generator.state,
+        "baseline": 0.0,
+        "b_init": False,
+    }
+    with pytest.raises(ValueError, match="trajectory v1"):
+        ctrl.load_state(v1_state)
+
+
+def test_drive_resume_rejects_v1_checkpoint(tmp_path):
+    """End-to-end: a checkpoint tag holding v1 controller state fails resume
+    loudly (instead of silently diverging the remaining trajectory)."""
+    from repro.runtime import Checkpointer, SearchRuntime
+
+    space = nas.tiny_space()
+    cfg = SearchConfig(samples=16, batch=8, seed=0)
+    joint = concat(space, has.has_space())
+    ck = Checkpointer(tmp_path / "ck")
+    ck.save("t", {
+        "meta": {"space": joint.name, "controller": "ppo", "seed": 0,
+                 "samples": 16, "batch": 8, "scenario": SC.name},
+        "controller": {
+            "logits": [np.zeros(len(c), np.float32) for c in joint.choices],
+            "adam": {"m": [], "v": [], "t": 0},
+            "rng": np.random.default_rng(0).bit_generator.state,
+            "baseline": 0.0, "b_init": False,
+        },
+        "samples_done": 8, "history": [], "best_record": None,
+        "best_vec": None, "wall_s": 0.0,
+    })
+    rt = SearchRuntime(checkpoint=ck)
+    with pytest.raises(ValueError, match="trajectory v1"):
+        search.joint_search(space, proxy.SurrogateAccuracy(), cfg=cfg,
+                            scenario=SC, runtime=rt, tag="t")
+
+
+def test_completed_v1_checkpoint_still_replays(tmp_path):
+    """A COMPLETED checkpoint is a pure result cache — controller state is
+    never consulted, so a finished search written by the v1 sampler must
+    keep replaying (only mid-search v1 resume is rejected)."""
+    from repro.runtime import Checkpointer, SearchRuntime
+
+    space = nas.tiny_space()
+    cfg = SearchConfig(samples=8, batch=8, seed=0)
+    joint = concat(space, has.has_space())
+    hist = [{"valid": False, "reward": -1.0, "accuracy": 0.0,
+             "latency_ms": None, "energy_mj": None, "area_mm2": None,
+             "sample_idx": i, "vec": (0,) * joint.num_decisions,
+             "space": joint.name, "scenario": SC.name} for i in range(8)]
+    ck = Checkpointer(tmp_path / "ck")
+    ck.save("t", {
+        "meta": {"space": joint.name, "controller": "ppo", "seed": 0,
+                 "samples": 8, "batch": 8, "scenario": SC.name},
+        "controller": {  # v1-shaped state: would raise if restored
+            "logits": [np.zeros(len(c), np.float32) for c in joint.choices],
+            "adam": {"m": [], "v": [], "t": 0},
+            "rng": np.random.default_rng(0).bit_generator.state,
+            "baseline": 0.0, "b_init": False,
+        },
+        "samples_done": 8, "history": hist, "best_record": None,
+        "best_vec": None, "wall_s": 1.5,
+    })
+    rt = SearchRuntime(checkpoint=ck)
+    res = search.joint_search(space, proxy.SurrogateAccuracy(), cfg=cfg,
+                              scenario=SC, runtime=rt, tag="t")
+    assert res.history == hist
+    assert res.engine_stats["requested"] == 0  # pure replay
+
+
+def test_same_seed_search_is_deterministic():
+    space = nas.tiny_space()
+    cfg = SearchConfig(samples=32, batch=8, seed=0)
+    a = search.joint_search(space, proxy.SurrogateAccuracy(), cfg=cfg,
+                            scenario=SC)
+    b = search.joint_search(space, proxy.SurrogateAccuracy(), cfg=cfg,
+                            scenario=SC)
+    assert a.history == b.history
+    assert a.best_record == b.best_record
+
+
+# ---------------------------------------------------------------------------
+# dispatch-count guard
+# ---------------------------------------------------------------------------
+
+
+class _CountingRng:
+    """Counts every attribute access on the wrapped generator — an upper
+    bound on the number of RNG method dispatches."""
+
+    def __init__(self, rng):
+        object.__setattr__(self, "_rng", rng)
+        object.__setattr__(self, "calls", 0)
+
+    def __getattr__(self, name):
+        object.__setattr__(self, "calls", self.calls + 1)
+        return getattr(self._rng, name)
+
+
+@pytest.mark.parametrize("name", ["ppo", "reinforce"])
+def test_batch_sampling_makes_o1_rng_calls(name):
+    sp = _space()  # 26 decisions: O(n·D) would be hundreds of calls
+    ctrl = controllers.CONTROLLERS[name](sp, seed=0)
+    counter = _CountingRng(ctrl.rng)
+    ctrl.rng = counter
+    ctrl.sample(64)
+    assert counter.calls == 1  # one rng.random((n, D)) draw, batch-size-free
+    ctrl.sample(8)
+    assert counter.calls == 2
+
+
+# ---------------------------------------------------------------------------
+# batched accuracy
+# ---------------------------------------------------------------------------
+
+
+def test_surrogate_batch_matches_reference_bitwise():
+    acc = proxy.SurrogateAccuracy()
+    rng = np.random.default_rng(0)
+    specs = []
+    for mk in (nas.tiny_space, nas.s1_mobilenetv2, nas.s2_efficientnet,
+               nas.s3_evolved):
+        sp = mk()
+        specs += [sp.decode(sp.sample(rng)) for _ in range(25)]
+    batched = acc.batch(specs)
+    assert batched == [acc._reference(s) for s in specs]
+    assert acc(specs[0]) == batched[0]  # scalar path rides batch()
+
+
+def test_cached_accuracy_batch_single_pass():
+    calls = []
+
+    class Probe:
+        def batch(self, specs):
+            calls.append(len(specs))
+            return [0.5 + 0.001 * i for i in range(len(specs))]
+
+    ca = proxy.CachedAccuracy(Probe())
+    sp = nas.tiny_space()
+    rng = np.random.default_rng(1)
+    specs = [sp.decode(sp.sample(rng)) for _ in range(8)]
+    out = ca.batch(specs + specs[:3])  # 3 in-batch duplicates
+    assert calls == [8]  # one vectorized call, duplicates collapsed
+    assert out[8:] == out[:3]
+    assert ca.hits == 3 and ca.misses == 8
+    again = ca.batch(specs)
+    assert calls == [8] and again == out[:8]
+    assert ca.hits == 11
+
+
+# ---------------------------------------------------------------------------
+# columnar scoring + FIFO helper
+# ---------------------------------------------------------------------------
+
+
+def test_score_batch_matches_score_bitwise():
+    nspace, hspace = nas.tiny_space(), has.has_space()
+    for sc_name in ("lat-0.3ms", "energy-0.7mJ"):
+        sc = scenarios.get(sc_name)
+        eng = EvaluationEngine(nspace, hspace, proxy.SurrogateAccuracy(),
+                               sc.reward_config(), cache=False)
+        raws = [
+            {"valid": False},
+            {"valid": True, "accuracy": 0.7, "latency_ms": 0.2,
+             "energy_mj": 0.4, "area_mm2": 10.0},
+            {"valid": True, "accuracy": 0.8, "latency_ms": 5.0,
+             "energy_mj": None, "area_mm2": 300.0},  # uncertifiable energy
+            {"valid": True, "accuracy": 0.6, "latency_ms": 0.29,
+             "energy_mj": 0.69, "area_mm2": 17.99},
+        ]
+        assert eng.score_batch(raws) == [eng.score(r) for r in raws]
+        eng.set_objective(sc.reward_config(), constraint_mode="area_only")
+        assert eng.score_batch(raws) == [eng.score(r) for r in raws]
+
+
+def test_fifo_dict_evicts_oldest_first():
+    d = FifoDict(3)
+    for i in range(5):
+        d[i] = i * 10
+    assert len(d) == 3 and d.evictions == 2
+    assert 0 not in d and 1 not in d and d[2] == 20
+    d[2] = 99  # overwrite must not evict
+    assert d.evictions == 2 and len(d) == 3
+
+
+def test_warm_start_biases_sampling():
+    sp = _space()
+    base = has.baseline_vec(has.has_space())
+    ctrl = controllers.PPOController(sp, seed=0)
+    ctrl.warm_start(nas.tiny_space().num_decisions, base, 8.0)
+    vecs = ctrl.sample(64)
+    has_part = vecs[:, nas.tiny_space().num_decisions:]
+    match = (has_part == base[None, :]).mean()
+    assert match > 0.9  # logit 8 ≈ deterministic pick of the baseline
