@@ -37,12 +37,13 @@ BENCHES = [
     ("sweep", "benchmarks.sweep_bench"),
     ("hw_backend", "benchmarks.hw_backend_bench"),
     ("runtime", "benchmarks.runtime_bench"),
+    ("serve", "benchmarks.serve_bench"),
     ("oneshot", "benchmarks.oneshot_bench"),
     ("meshsearch", "benchmarks.meshsearch_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
 
-QUICK = ("engine", "search_loop", "hw_backend", "roofline")
+QUICK = ("engine", "search_loop", "hw_backend", "roofline", "serve")
 
 
 def main() -> None:

@@ -1,0 +1,125 @@
+"""Co-design-as-a-service: what the snapshot + query layer buys.
+
+Measurements over the committed fixture store
+(``tests/data/serve_fixture.jsonl`` — no search, no simulation):
+
+1. **cold reload** — answering one query the pre-serve way: re-parse the
+   JSONL store log into a frontier, then score (what every fresh process
+   paid before ``repro.serve`` existed);
+2. **snapshot load** — compact once, then memory-map the columnar
+   artifact back (``load_snapshot``): the serve tier's process start;
+3. **warm queries** — a mixed workload (every registered scenario +
+   ad-hoc envelopes, repeated) against one live ``FrontierServer``:
+   queries/s, p50/p99 latency, LRU answer-cache hit rate.
+
+The acceptance bar from the serve-subsystem issue: warm-snapshot queries
+>= 100x faster than a cold JSONL reload, p99 < 1 ms on the fixture
+frontier.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import scenarios as scenarios_lib
+from repro.serve import (
+    FrontierServer,
+    load_snapshot,
+    load_store_frontier,
+    snapshot_store,
+)
+
+FIXTURE = Path(__file__).parent.parent / "tests" / "data" / "serve_fixture.jsonl"
+
+
+def _workload(n_adhoc: int, repeats: int) -> list:
+    """Every registered scenario + seeded ad-hoc envelopes, tiled so the
+    answer cache sees realistic re-asks."""
+    rng = np.random.default_rng(0)
+    pool = [scenarios_lib.get(n) for n in scenarios_lib.names()]
+    for i in range(n_adhoc):
+        kw = {
+            "name": f"adhoc-{i}",
+            "mode": "hard" if rng.random() < 0.7 else "soft",
+            "area_target_mm2": float(rng.uniform(5.0, 80.0)),
+        }
+        if rng.random() < 0.6:
+            kw["latency_target_ms"] = float(rng.uniform(0.005, 2.0))
+        else:
+            kw["energy_target_mj"] = float(rng.uniform(0.001, 1.0))
+        pool.append(scenarios_lib.Scenario(**kw))
+    queries = pool * repeats
+    rng.shuffle(queries)
+    return queries
+
+
+def run(fast: bool = True) -> dict:
+    cold_reps = 5 if fast else 25
+    n_adhoc = 40 if fast else 200
+    repeats = 40 if fast else 200
+
+    # 1. cold: JSONL reload + one query, per query (the pre-serve path)
+    sc0 = scenarios_lib.get("lat-0.3ms")
+    cold_times = []
+    for _ in range(cold_reps):
+        t0 = time.perf_counter()
+        frontier, _ = load_store_frontier(FIXTURE)
+        frontier.best(sc0)
+        cold_times.append(time.perf_counter() - t0)
+    cold_us = float(np.median(cold_times) * 1e6)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        snap_path = Path(tmp) / "fixture.snap"
+        t0 = time.perf_counter()
+        header, _ = snapshot_store(FIXTURE, snap_path)
+        compact_s = time.perf_counter() - t0
+
+        # 2. snapshot load: the serve tier's process start
+        t0 = time.perf_counter()
+        server = FrontierServer(load_snapshot(snap_path).frontier())
+        snap_load_us = (time.perf_counter() - t0) * 1e6
+
+        # 3. warm queries against the live server
+        queries = _workload(n_adhoc, repeats)
+        lat_ns = np.empty(len(queries))
+        t_all0 = time.perf_counter()
+        for i, sc in enumerate(queries):
+            t0 = time.perf_counter_ns()
+            server.best(sc)
+            lat_ns[i] = time.perf_counter_ns() - t0
+        wall_s = time.perf_counter() - t_all0
+
+    p50_us = float(np.percentile(lat_ns, 50) / 1e3)
+    p99_us = float(np.percentile(lat_ns, 99) / 1e3)
+    qps = len(queries) / wall_s
+    hit_rate = server.stats.cache_hit_rate
+    speedup = cold_us / max(p50_us, 1e-9)
+
+    return {
+        "frontier_records": header["count"],
+        "queries": len(queries),
+        "cold_reload_us": cold_us,
+        "snapshot_compact_s": compact_s,
+        "snapshot_load_us": snap_load_us,
+        "warm_p50_us": p50_us,
+        "warm_p99_us": p99_us,
+        "queries_per_s": qps,
+        "cache_hit_rate": hit_rate,
+        "warm_vs_cold_x": speedup,
+        "p99_under_1ms": bool(p99_us < 1000.0),
+        "evaluations": server.stats.evaluations,  # always 0: serve-only
+        "n_evals": len(queries),
+        "derived": (
+            f"warm {p50_us:.1f}us p50 / {p99_us:.1f}us p99, "
+            f"{qps:,.0f} q/s, cache {hit_rate:.0%}; "
+            f"{speedup:,.0f}x vs cold reload ({cold_us / 1e3:.1f}ms)"
+        ),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    print(out["derived"])

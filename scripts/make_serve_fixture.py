@@ -1,0 +1,82 @@
+"""Regenerate the committed serve-stack fixture store.
+
+``tests/data/serve_fixture.jsonl`` is a small, fully deterministic
+``DurableRecordStore`` log used by ``tests/test_serve.py`` and
+``benchmarks/serve_bench.py --quick`` so the serve stack can be exercised
+without running a search: a quick 4-scenario sweep over the tiny space with
+the calibrated ``SurrogateAccuracy`` signal and the analytic simulator
+(seed 0 end to end), compacted so the log holds exactly one line per unique
+(namespace ++ vec) key.
+
+Both the accuracy signal and the analytic backend have content-based engine
+namespaces (``engine._identity_token``), so the digest prefixes persisted
+here are reproducible from source — ``tests/test_serve.py`` asserts they
+match a freshly built engine's identity token.
+
+  PYTHONPATH=src python scripts/make_serve_fixture.py [--out PATH]
+
+Regenerate (and re-commit) the fixture only when the record format, the
+engine namespace recipe, the tiny space, or the surrogate changes; the CLI
+regression goldens (``tests/data/serve_fixture_golden.json``) must be
+refreshed in the same commit — see the test module docstring.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.core import nas, proxy, sweep
+from repro.core.search import SearchConfig
+from repro.runtime import DurableRecordStore, SearchRuntime
+
+# Two latency-, one energy- and one area-bounded use case: enough objective
+# diversity that the persisted frontier has distinct per-scenario winners.
+SCENARIOS = (
+    "lat-0.3ms",
+    "lat-0.8ms",
+    "lat-1.3ms",
+    "energy-0.7mJ",
+    "edge-sku-small",
+    "lat-0.5ms-soft",
+)
+SAMPLES = 192
+BATCH = 16
+SEED = 0
+
+DEFAULT_OUT = Path(__file__).parent.parent / "tests" / "data" / "serve_fixture.jsonl"
+
+
+def build(out: Path) -> DurableRecordStore:
+    out.parent.mkdir(parents=True, exist_ok=True)
+    if out.exists():
+        out.unlink()
+    store = DurableRecordStore(out)
+    runner = sweep.SweepRunner(
+        list(SCENARIOS),
+        nas.tiny_space(),
+        proxy.SurrogateAccuracy(),
+        sweep.SweepConfig(search=SearchConfig(samples=SAMPLES, batch=BATCH, seed=SEED)),
+    )
+    result = runner.run(runtime=SearchRuntime(store=store))
+    dropped = store.compact()  # one line per key: deterministic, diff-friendly
+    store.close()
+    print(
+        f"{out}: {len(store)} records "
+        f"({store.stats.puts} puts, {dropped} stale lines compacted away), "
+        f"frontier {len(result.frontier)}"
+    )
+    return store
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,23 +1,36 @@
 """Serve "best config for scenario X" off a persisted record store.
 
-Loads a ``repro.runtime.DurableRecordStore`` JSONL log (as written by
-``scripts/sweep.py --store``), folds every valid raw record into one Pareto
-frontier over (accuracy, latency, energy, area), and answers per-scenario
-best-config queries with **zero** search or simulation — including for
-scenarios that were never searched: the frontier contains an optimal record
-for any monotone objective (see ``repro.core.pareto``).
+The CLI face of ``repro.serve`` (co-design as a service). Sources, in
+order of preference:
+
+* ``--snapshot art.snap`` — memory-map a compacted frontier snapshot
+  (``repro.serve.snapshot``): no JSON log parsing at all, the warm path;
+* ``--store s.jsonl`` — fold a ``repro.runtime.DurableRecordStore`` log
+  (as written by ``scripts/sweep.py --store``) into the frontier, opened
+  **read-only** so a live log with a concurrent writer is safe to serve.
+
+Either way every valid raw record ends up in one Pareto frontier over
+(accuracy, latency, energy, area) behind a ``FrontierServer``, and
+per-scenario best-config queries are answered with **zero** search or
+simulation — including for scenarios that were never searched: the
+frontier contains an optimal record for any monotone objective (see
+``repro.core.pareto``).
 
   PYTHONPATH=src python scripts/runtime_serve.py --store /tmp/s.jsonl --all
   PYTHONPATH=src python scripts/runtime_serve.py --store /tmp/s.jsonl \\
+      --compact-to /tmp/s.snap
+  PYTHONPATH=src python scripts/runtime_serve.py --snapshot /tmp/s.snap \\
       --scenario lat-0.3ms --scenario edge-sku-nano
   PYTHONPATH=src python scripts/runtime_serve.py --store /tmp/s.jsonl \\
       --query lat=0.45,area=40,mode=soft
-  PYTHONPATH=src python scripts/runtime_serve.py --store /tmp/s.jsonl --serve
+  PYTHONPATH=src python scripts/runtime_serve.py --snapshot /tmp/s.snap --serve
 
 ``--serve`` reads queries from stdin (one scenario name or ``key=value``
 query per line) and answers each — a process holding the frontier in memory
 answers in microseconds, which is the point: the expensive part was paid by
-whatever populated the store.
+whatever populated the store. The exit summary on stderr reports the serve
+stats; ``evaluations=0`` is load-bearing — CI greps it to prove the serve
+tier never touched the simulator.
 """
 from __future__ import annotations
 
@@ -29,38 +42,19 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 from repro.core import scenarios as scenarios_lib
-from repro.core.engine import split_key
-from repro.core.pareto import ParetoFrontier
-from repro.runtime import DurableRecordStore
+from repro.serve import (
+    FrontierServer,
+    load_snapshot,
+    load_store_frontier,
+    snapshot_store,
+)
 
 
-def load_frontier(store_path: str) -> tuple[ParetoFrontier, dict]:
-    """Store log -> one frontier over every valid record. Each record is
-    annotated with its decision vector and namespace digest prefix (the
-    config identity; one namespace per engine configuration — a joint sweep
-    over one space writes exactly one)."""
-    store = DurableRecordStore(store_path)
-    store.close()  # read-only use: no appends
-    frontier = ParetoFrontier()
-    namespaces = set()
-    total = 0
-    for key, raw, writer in store.entries():
-        total += 1
-        ns, vec = split_key(key)
-        namespaces.add(ns.hex()[:12])
-        rec = dict(raw)
-        rec["vec"] = vec
-        rec["ns"] = ns.hex()[:12]
-        if writer is not None:
-            rec["paid_by"] = writer
-        frontier.add(rec)
-    info = {
-        "records": total,
-        "frontier": len(frontier),
-        "namespaces": sorted(namespaces),
-        "dropped_lines": store.loaded_dropped,
-    }
-    return frontier, info
+def load_frontier(store_path: str):
+    """Store log -> one frontier over every valid record (kept as the
+    script's public helper; now a read-only open — see
+    ``repro.serve.snapshot.load_store_frontier``)."""
+    return load_store_frontier(store_path)
 
 
 def parse_query(text: str) -> scenarios_lib.Scenario:
@@ -87,15 +81,8 @@ def parse_query(text: str) -> scenarios_lib.Scenario:
     return scenarios_lib.Scenario(**kw)
 
 
-def answer(frontier: ParetoFrontier, sc: scenarios_lib.Scenario) -> dict:
-    best = frontier.best(sc)
-    out = {
-        "scenario": sc.name,
-        "targets": sc.describe(),
-        "best": best,
-        "feasible": best is not None and sc.feasible(best),
-    }
-    return out
+def answer(server: FrontierServer, sc: scenarios_lib.Scenario) -> dict:
+    return server.answer(sc)
 
 
 def show(out: dict, as_json: bool) -> None:
@@ -121,8 +108,16 @@ def main() -> None:
     ap = argparse.ArgumentParser(
         description="best co-design configs off a persisted record store"
     )
+    ap.add_argument("--store", metavar="PATH", help="DurableRecordStore JSONL log")
     ap.add_argument(
-        "--store", required=True, metavar="PATH", help="DurableRecordStore JSONL log"
+        "--snapshot",
+        metavar="PATH",
+        help="compacted frontier snapshot artifact (see --compact-to)",
+    )
+    ap.add_argument(
+        "--compact-to",
+        metavar="PATH",
+        help="compact --store into a snapshot artifact at PATH, then serve",
     )
     ap.add_argument(
         "--scenario",
@@ -145,20 +140,52 @@ def main() -> None:
     ap.add_argument("--json", action="store_true", help="one JSON object per answer")
     args = ap.parse_args()
 
-    frontier, info = load_frontier(args.store)
-    print(
-        f"# {args.store}: {info['records']} records, "
-        f"frontier {info['frontier']}, "
-        f"{len(info['namespaces'])} namespace(s)",
-        file=sys.stderr,
-    )
+    if args.store is None and args.snapshot is None:
+        ap.error("pass --store and/or --snapshot")
+    if args.compact_to and args.store is None:
+        ap.error("--compact-to needs --store")
+
+    if args.compact_to:
+        header, info = snapshot_store(args.store, args.compact_to)
+        print(
+            f"# compacted {args.store} ({info['records']} records) -> "
+            f"{args.compact_to}: frontier {header['count']}, "
+            f"{header['digest'][:19]}…",
+            file=sys.stderr,
+        )
+        server = FrontierServer.from_snapshot(args.compact_to)
+    elif args.snapshot is not None:
+        snap = load_snapshot(args.snapshot, verify=True)
+        server = FrontierServer(snap.frontier())
+        print(
+            f"# {args.snapshot}: frontier {snap.count} "
+            f"(snapshot v{snap.header['version']}, verified)",
+            file=sys.stderr,
+        )
+        if args.store is not None:
+            frontier, info = load_store_frontier(args.store)
+            server.merge_frontier(frontier)
+            print(
+                f"# {args.store}: {info['records']} records folded in, "
+                f"frontier {len(server)}",
+                file=sys.stderr,
+            )
+    else:
+        frontier, info = load_store_frontier(args.store)
+        server = FrontierServer(frontier)
+        print(
+            f"# {args.store}: {info['records']} records, "
+            f"frontier {info['frontier']}, "
+            f"{len(info['namespaces'])} namespace(s)",
+            file=sys.stderr,
+        )
 
     queries = [parse_query(s) for s in args.scenario]
     queries += [parse_query(q) for q in args.query]
     if args.all:
         queries += [scenarios_lib.get(n) for n in scenarios_lib.names()]
     for sc in queries:
-        show(answer(frontier, sc), args.json)
+        show(answer(server, sc), args.json)
 
     if args.serve:
         print(
@@ -170,12 +197,20 @@ def main() -> None:
             if not line or line.startswith("#"):
                 continue
             try:
-                show(answer(frontier, parse_query(line)), args.json)
+                show(answer(server, parse_query(line)), args.json)
             except (KeyError, ValueError) as e:
                 print(f"error: {e}", file=sys.stderr)
             sys.stdout.flush()
-    elif not queries:
+    elif not queries and not args.compact_to:
         ap.error("nothing to answer: pass --scenario/--query/--all/--serve")
+
+    s = server.stats
+    print(
+        f"# served queries={s.queries} cache_hits={s.cache_hits} "
+        f"indexed={s.index_answers} scanned={s.scan_answers} "
+        f"evaluations={s.evaluations} (zero search, zero simulation)",
+        file=sys.stderr,
+    )
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ records dominate them but they still participate on the metrics they do have.
 """
 from __future__ import annotations
 
+import json
 import math
 from typing import Iterable, Mapping, Optional, Sequence
 
@@ -45,6 +46,15 @@ def _dominates(a: tuple, b: tuple) -> bool:
     return all(x <= y for x, y in zip(a, b)) and a != b
 
 
+def _tie_key(record: Mapping) -> str:
+    """Deterministic total order over metric-identical records (records whose
+    canonical tuples are equal but whose payloads differ — e.g. two decision
+    vectors decoding to the same architecture). The frontier keeps the
+    smallest tie-key, so the surviving *set* is independent of insertion
+    order — which is what makes ``merge`` commutative and idempotent."""
+    return json.dumps(record, sort_keys=True, default=repr)
+
+
 def dominates(
     a: Mapping,
     b: Mapping,
@@ -57,11 +67,13 @@ def dominates(
 class ParetoFrontier:
     """A mutually non-dominated set of records, maintained incrementally.
 
-    ``add`` is O(frontier size) per record: a candidate dominated by (or
-    metric-identical to) a member is rejected; otherwise it joins and evicts
-    every member it dominates. Only valid records participate. Stored records
-    are copied on the way in and handed out as copies, so callers may mutate
-    freely.
+    ``add`` is O(frontier size) per record: a candidate dominated by a member
+    is rejected; a metric-identical candidate replaces the member only when
+    it wins the deterministic tie-break (``_tie_key``), so the surviving
+    member *set* is insertion-order independent and ``merge`` is commutative
+    and idempotent; otherwise it joins and evicts every member it dominates.
+    Only valid records participate. Stored records are copied on the way in
+    and handed out as copies, so callers may mutate freely.
     """
 
     def __init__(self, objectives: Sequence[Objective] = DEFAULT_OBJECTIVES):
@@ -76,8 +88,15 @@ class ParetoFrontier:
         if not record.get("valid", False):
             return False
         v = _canon(record, self.objectives)
-        for pv, _ in self._points:
-            if pv == v or _dominates(pv, v):
+        for i, (pv, pr) in enumerate(self._points):
+            if pv == v:
+                # metric-identical: keep the deterministic representative so
+                # the frontier set is insertion-order-independent (see
+                # _tie_key); the newcomer never counts as admitted
+                if _tie_key(record) < _tie_key(pr):
+                    self._points[i] = (v, dict(record))
+                return False
+            if _dominates(pv, v):
                 return False
         keep = [t for t in self._points if not _dominates(v, t[0])]
         self._points = keep

@@ -39,17 +39,26 @@ def _dump_line(key: bytes, raw: dict, writer: Optional[str]) -> str:
 
 
 class DurableRecordStore(RecordStore):
-    """A ``RecordStore`` backed by an append-only JSONL log (module doc)."""
+    """A ``RecordStore`` backed by an append-only JSONL log (module doc).
+
+    ``read_only=True`` opens the log strictly for reading: the store never
+    acquires an append handle, and ``put``/``compact`` raise instead of
+    mutating the file — so a reader (``repro.serve``, the serve CLI) can
+    rehydrate a *live* log without interfering with a concurrent writer
+    (the load tolerates the writer's in-flight torn tail the same way a
+    crash-recovery load does)."""
 
     def __init__(
         self,
         path: Union[str, Path],
         max_entries: int = 1_000_000,
         fsync: bool = False,
+        read_only: bool = False,
     ):
         super().__init__(max_entries)
         self.path = Path(path)
         self.fsync = fsync
+        self.read_only = read_only
         self.loaded = 0          # entries rehydrated from the log
         self.loaded_dropped = 0  # corrupt / torn lines skipped on load
         self.appended = 0        # lines this process appended
@@ -82,6 +91,10 @@ class DurableRecordStore(RecordStore):
                         self.loaded += 1
 
     def _handle(self):
+        if self.read_only:
+            raise RuntimeError(
+                f"store opened read_only ({self.path}): appends are disabled"
+            )
         if self._file is None:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             self._file = open(self.path, "a", encoding="utf-8")
@@ -98,6 +111,10 @@ class DurableRecordStore(RecordStore):
     # ---- RecordStore interface -------------------------------------------
 
     def put(self, key: bytes, raw: dict, writer: Optional[str] = None) -> None:
+        if self.read_only:
+            raise RuntimeError(
+                f"store opened read_only ({self.path}): appends are disabled"
+            )
         with self._lock:
             super().put(key, raw, writer)
             self._append(key, raw, writer)
@@ -106,6 +123,12 @@ class DurableRecordStore(RecordStore):
         """Atomically rewrite the log to the live entries; returns the number
         of log lines dropped (stale duplicates + evicted keys)."""
         with self._lock:
+            if self.read_only:
+                raise RuntimeError(
+                    f"store opened read_only ({self.path}): compact is "
+                    f"disabled (repro.serve snapshots compact to a separate "
+                    f"artifact instead)"
+                )
             if self._file is not None:
                 self._file.close()
                 self._file = None
