@@ -37,13 +37,14 @@ BENCHES = [
     ("sweep", "benchmarks.sweep_bench"),
     ("hw_backend", "benchmarks.hw_backend_bench"),
     ("runtime", "benchmarks.runtime_bench"),
+    ("executor", "benchmarks.executor_bench"),
     ("serve", "benchmarks.serve_bench"),
     ("oneshot", "benchmarks.oneshot_bench"),
     ("meshsearch", "benchmarks.meshsearch_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
 
-QUICK = ("engine", "search_loop", "hw_backend", "roofline", "serve")
+QUICK = ("engine", "search_loop", "hw_backend", "roofline", "serve", "executor")
 
 
 def main() -> None:

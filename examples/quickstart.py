@@ -13,9 +13,11 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
-from repro.core import nas, search, simulator
+from repro.core import nas, simulator
 from repro.core.proxy import TrainedAccuracy
 from repro.core.reward import RewardConfig
+from repro.core.search import SearchConfig
+from repro.core.session import SearchSession
 
 
 def main():
@@ -25,10 +27,11 @@ def main():
     acc_fn = TrainedAccuracy(steps=60, batch=32)  # real training per sample
     rcfg = RewardConfig(latency_target_ms=0.05,
                         area_target_mm2=simulator.BASELINE_AREA_MM2)
-    res = search.joint_search(
-        space, acc_fn, rcfg,
-        search.SearchConfig(samples=24, batch=8, seed=0),
-    )
+    # one session = one resolved evaluation context; .joint/.fixed_hw/... run
+    # any number of searches against it (repro.core.session)
+    ses = SearchSession(space, acc_fn,
+                        cfg=SearchConfig(samples=24, batch=8, seed=0))
+    res = ses.joint(rcfg=rcfg)
     print(f"\nevaluated {len(res.history)} samples in {res.wall_s:.0f}s")
     best = res.best_record
     if best is None:

@@ -31,17 +31,26 @@ answers in microseconds, which is the point: the expensive part was paid by
 whatever populated the store. The exit summary on stderr reports the serve
 stats; ``evaluations=0`` is load-bearing — CI greps it to prove the serve
 tier never touched the simulator.
+
+Flags shared with ``scripts/sweep.py`` (one ``repro.runtime.cli`` parent):
+``--preset`` answers a whole scenario preset, ``--quick`` skips snapshot
+digest verification, and ``--budget-samples``/``--deadline-s`` switch
+coverage misses from best-effort answers to budgeted on-demand searches
+(``repro.serve.AdmissionController``) whose results fold into the live
+frontier.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+from concurrent.futures import TimeoutError as FuturesTimeout
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 from repro.core import scenarios as scenarios_lib
+from repro.runtime import cli as runtime_cli
 from repro.serve import (
     FrontierServer,
     load_snapshot,
@@ -81,8 +90,25 @@ def parse_query(text: str) -> scenarios_lib.Scenario:
     return scenarios_lib.Scenario(**kw)
 
 
-def answer(server: FrontierServer, sc: scenarios_lib.Scenario) -> dict:
-    return server.answer(sc)
+def answer(
+    server: FrontierServer,
+    sc: scenarios_lib.Scenario,
+    admission=None,
+    deadline_s=None,
+) -> dict:
+    """Frontier answer; with an ``AdmissionController``, uncovered scenarios
+    admit one budgeted on-demand search (waiting up to ``deadline_s``) and
+    re-answer off the folded frontier."""
+    if admission is None:
+        return server.answer(sc)
+    adm = admission.query(sc)
+    if adm.future is not None:
+        try:
+            adm.future.result(timeout=deadline_s)
+        except FuturesTimeout:
+            pass  # deadline hit: fall through to the best-effort answer
+        adm.answer = server.answer(sc)
+    return adm.answer
 
 
 def show(out: dict, as_json: bool) -> None:
@@ -105,14 +131,11 @@ def show(out: dict, as_json: bool) -> None:
 
 
 def main() -> None:
+    # --store/--snapshot/--preset/--quick/budget flags come from the shared
+    # parent (repro.runtime.cli) — same spellings as scripts/sweep.py
     ap = argparse.ArgumentParser(
-        description="best co-design configs off a persisted record store"
-    )
-    ap.add_argument("--store", metavar="PATH", help="DurableRecordStore JSONL log")
-    ap.add_argument(
-        "--snapshot",
-        metavar="PATH",
-        help="compacted frontier snapshot artifact (see --compact-to)",
+        description="best co-design configs off a persisted record store",
+        parents=[runtime_cli.shared_parser()],
     )
     ap.add_argument(
         "--compact-to",
@@ -155,11 +178,14 @@ def main() -> None:
         )
         server = FrontierServer.from_snapshot(args.compact_to)
     elif args.snapshot is not None:
-        snap = load_snapshot(args.snapshot, verify=True)
+        # --quick trusts the artifact (CI smoke / local iteration): skip the
+        # whole-payload digest verification, and say so
+        snap = load_snapshot(args.snapshot, verify=not args.quick)
         server = FrontierServer(snap.frontier())
+        verified = "digest unverified (--quick)" if args.quick else "verified"
         print(
             f"# {args.snapshot}: frontier {snap.count} "
-            f"(snapshot v{snap.header['version']}, verified)",
+            f"(snapshot v{snap.header['version']}, {verified})",
             file=sys.stderr,
         )
         if args.store is not None:
@@ -180,12 +206,32 @@ def main() -> None:
             file=sys.stderr,
         )
 
+    # budget flags turn coverage misses into budgeted on-demand searches
+    # (repro.serve.AdmissionController) instead of best-effort answers
+    admission = None
+    if args.budget_samples is not None or args.deadline_s is not None:
+        from repro.core import nas, proxy
+        from repro.serve import AdmissionConfig, AdmissionController
+
+        acfg = AdmissionConfig(budget_samples=args.budget_samples or 96)
+        admission = AdmissionController(
+            server, nas.tiny_space(), proxy.SurrogateAccuracy(), acfg
+        )
+        print(
+            f"# admission: uncovered queries search on demand "
+            f"(budget {acfg.budget_samples} samples, "
+            f"deadline {args.deadline_s or 'none'})",
+            file=sys.stderr,
+        )
+
     queries = [parse_query(s) for s in args.scenario]
     queries += [parse_query(q) for q in args.query]
+    if args.preset:
+        queries += scenarios_lib.expand([args.preset])
     if args.all:
         queries += [scenarios_lib.get(n) for n in scenarios_lib.names()]
     for sc in queries:
-        show(answer(server, sc), args.json)
+        show(answer(server, sc, admission, args.deadline_s), args.json)
 
     if args.serve:
         print(
@@ -197,7 +243,10 @@ def main() -> None:
             if not line or line.startswith("#"):
                 continue
             try:
-                show(answer(server, parse_query(line)), args.json)
+                show(
+                    answer(server, parse_query(line), admission, args.deadline_s),
+                    args.json,
+                )
             except (KeyError, ValueError) as e:
                 print(f"error: {e}", file=sys.stderr)
             sys.stdout.flush()
@@ -205,10 +254,16 @@ def main() -> None:
         ap.error("nothing to answer: pass --scenario/--query/--all/--serve")
 
     s = server.stats
+    if admission is not None:
+        admission.close()
+        print(f"# admission: admitted={admission.admitted}", file=sys.stderr)
+        suffix = f"{admission.admitted} on-demand search(es) admitted"
+    else:
+        suffix = "zero search, zero simulation"
     print(
         f"# served queries={s.queries} cache_hits={s.cache_hits} "
         f"indexed={s.index_answers} scanned={s.scan_answers} "
-        f"evaluations={s.evaluations} (zero search, zero simulation)",
+        f"evaluations={s.evaluations} ({suffix})",
         file=sys.stderr,
     )
 

@@ -10,9 +10,14 @@ to an append-only JSONL log and checkpoints each search per batch (under
 ``--checkpoint-dir``, default ``PATH.ck``) — kill the process at any point
 and re-run with ``--resume`` to continue exactly where it stopped; a second
 full run against the same store re-simulates nothing. ``--workers N`` runs
-the scenarios concurrently (``repro.runtime.SearchExecutor``), and
-``--budget-samples`` / ``--deadline-s`` bound the run, checkpointing
-everything in flight when the budget expires (exit code 3: resumable).
+the scenarios concurrently (``repro.runtime.SearchExecutor``) — add
+``--processes`` to shard them across N spawned worker processes, each
+appending to its own single-writer store segment (log shipping; merged
+back on return, retired by ``--compact``). ``--budget-samples`` /
+``--deadline-s`` bound the run, checkpointing everything in flight when
+the budget expires (exit code 3: resumable). ``--snapshot PATH`` writes a
+compacted frontier snapshot after the sweep for ``runtime_serve.py``.
+Shared flags live in ``repro.runtime.cli``.
 
 Backends (``--backend``, see ``repro.hw``): ``analytic`` (exact simulator,
 default), ``learned`` (an MLP cost model trained on the fly, energy head
@@ -27,6 +32,8 @@ rules out, and prints the per-stage prune counters).
   PYTHONPATH=src python scripts/sweep.py --scenarios lat-0.3ms,edge-sku-nano
   PYTHONPATH=src python scripts/sweep.py --quick --store /tmp/s.jsonl
   PYTHONPATH=src python scripts/sweep.py --quick --store /tmp/s.jsonl --resume
+  PYTHONPATH=src python scripts/sweep.py --quick --store /tmp/s.jsonl \\
+      --workers 4 --processes
   PYTHONPATH=src python scripts/sweep.py --list
 """
 from __future__ import annotations
@@ -34,20 +41,25 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 from repro.core import nas, proxy, scenarios, sweep
 from repro.core.search import SearchConfig, SearchInterrupted
+from repro.runtime import cli as runtime_cli
 
 EXIT_INTERRUPTED = 3  # budget/deadline expired; re-run with --resume
 
 
 def build_parser() -> argparse.ArgumentParser:
-    ap = argparse.ArgumentParser(description="multi-use-case co-design sweep")
-    ap.add_argument("--preset", default=None, help="scenario preset (see --list)")
+    # --store/--snapshot/--preset/--quick and the budget flags come from the
+    # shared parent (repro.runtime.cli) so this CLI and runtime_serve.py
+    # can't drift apart on them
+    ap = argparse.ArgumentParser(
+        description="multi-use-case co-design sweep",
+        parents=[runtime_cli.shared_parser()],
+    )
     ap.add_argument(
         "--scenarios", default=None, help="comma-separated scenario/preset names"
     )
@@ -68,18 +80,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--controller", default="ppo")
     ap.add_argument(
-        "--quick", action="store_true", help="CI-sized run: tiny space, 96 samples"
-    )
-    ap.add_argument(
         "--no-share",
         action="store_true",
         help="ablation: per-scenario private caches instead of the shared store",
-    )
-    ap.add_argument(
-        "--store",
-        default=None,
-        metavar="PATH",
-        help="durable record store (append-only JSONL, reused across runs)",
     )
     ap.add_argument(
         "--checkpoint-dir",
@@ -98,19 +101,23 @@ def build_parser() -> argparse.ArgumentParser:
         type=int,
         default=0,
         metavar="N",
-        help="run scenarios concurrently on N threads (0 = serial)",
+        help="run scenarios concurrently on N threads (0 = serial), or on "
+        "N sharded worker processes with --processes",
     )
     ap.add_argument(
-        "--budget-samples",
+        "--processes",
+        action="store_true",
+        help="shard scenarios across --workers spawned processes, each "
+        "appending to its own store segment (log shipping; needs --store, "
+        "or runs private per-worker caches without one)",
+    )
+    ap.add_argument(
+        "--devices-per-worker",
         type=int,
         default=None,
-        help="stop (checkpointing everything) after this many samples total",
-    )
-    ap.add_argument(
-        "--deadline-s",
-        type=float,
-        default=None,
-        help="stop (checkpointing everything) after this much wall clock",
+        metavar="D",
+        help="force D simulated XLA host devices into each worker process "
+        "(XLA_FLAGS=--xla_force_host_platform_device_count=D)",
     )
     ap.add_argument(
         "--checkpoint-every",
@@ -133,42 +140,6 @@ def build_parser() -> argparse.ArgumentParser:
         "--list", action="store_true", help="list scenarios and presets, then exit"
     )
     return ap
-
-
-def build_runtime(args):
-    """--store/--checkpoint-dir/--resume/budget flags -> SearchRuntime."""
-    if args.store is None and args.checkpoint_dir is None:
-        if args.budget_samples is None and args.deadline_s is None:
-            return None
-    from repro.runtime import Budget, Checkpointer, DurableRecordStore, SearchRuntime
-
-    store = None
-    if args.store is not None:
-        if args.no_share:
-            raise SystemExit("--store and --no-share are contradictory")
-        store = DurableRecordStore(args.store)
-    ck_dir = args.checkpoint_dir
-    if ck_dir is None and args.store is not None:
-        ck_dir = args.store + ".ck"
-    checkpoint = None
-    if ck_dir is not None:
-        checkpoint = Checkpointer(ck_dir)
-        if not args.resume:
-            cleared = checkpoint.clear()
-            if cleared:
-                print(
-                    f"cleared {cleared} stale checkpoint(s) in {ck_dir} "
-                    f"(pass --resume to continue them)"
-                )
-    budget = None
-    if args.budget_samples is not None or args.deadline_s is not None:
-        budget = Budget(max_samples=args.budget_samples, deadline_s=args.deadline_s)
-    return SearchRuntime(
-        store=store,
-        checkpoint=checkpoint,
-        budget=budget,
-        checkpoint_every=args.checkpoint_every,
-    )
 
 
 def build_backend(args, runner):
@@ -210,7 +181,12 @@ def build_backend(args, runner):
 
 
 def main() -> None:
-    args = build_parser().parse_args()
+    ap = build_parser()
+    args = ap.parse_args()
+    if args.snapshot and not args.store:
+        ap.error("--snapshot needs --store (the snapshot compacts its log)")
+    if args.processes and not args.workers:
+        ap.error("--processes needs --workers N")
 
     if args.list:
         print("scenarios:")
@@ -232,7 +208,7 @@ def main() -> None:
     space_name = "tiny" if args.quick else args.space
     samples = min(args.samples, 96) if args.quick else args.samples
     space = nas.SPACES[space_name]()
-    runtime = build_runtime(args)
+    runtime = runtime_cli.build_runtime(args)
     cfg = sweep.SweepConfig(
         driver=args.driver,
         search=SearchConfig(
@@ -242,12 +218,17 @@ def main() -> None:
             controller=args.controller,
         ),
         share_cache=not args.no_share,
+        workers=args.workers,
+        processes=args.processes,
+        devices_per_worker=args.devices_per_worker,
     )
     runner = sweep.SweepRunner(selected, space, proxy.SurrogateAccuracy(), cfg)
     cfg.backend = build_backend(args, runner)
     extras = f", store={args.store}" if args.store else ""
     if args.workers:
         extras += f", workers={args.workers}"
+        if args.processes:
+            extras += " (processes)"
     print(
         f"sweep: {len(runner.scenarios)} scenarios × {samples} samples, "
         f"driver={args.driver}, backend={args.backend}, space={space_name}, "
@@ -256,11 +237,8 @@ def main() -> None:
 
     interrupted = False
     try:
-        if args.workers > 0:
-            result = run_concurrent(args, runner, runtime, cfg)
-            interrupted = result is None
-        else:
-            result = runner.run(verbose=True, runtime=runtime)
+        # serial or concurrent: SweepRunner dispatches on cfg.workers
+        result = runner.run(verbose=True, runtime=runtime)
     except SearchInterrupted as e:
         print(f"\n{e}")
         interrupted = True
@@ -296,6 +274,11 @@ def main() -> None:
                 f"store: {len(store)} records in {args.store} "
                 f"(loaded {store.loaded}, appended {store.appended})"
             )
+            if args.snapshot and not interrupted:
+                from repro.serve import snapshot_store
+
+                header, _info = snapshot_store(args.store, args.snapshot)
+                print(f"snapshot: frontier {header['count']} -> {args.snapshot}")
 
     if interrupted:
         if runtime is not None and runtime.checkpoint is not None:
@@ -309,50 +292,6 @@ def main() -> None:
                 "or --checkpoint-dir to make interrupted runs resumable)"
             )
         raise SystemExit(EXIT_INTERRUPTED)
-
-
-def run_concurrent(args, runner, runtime, cfg):
-    """--workers N: the same sweep through repro.runtime.SearchExecutor.
-    Returns None when any search was interrupted (budget/deadline)."""
-    from repro.core.engine import RecordStore
-    from repro.runtime import SearchExecutor, scenario_jobs
-
-    store = runtime.store if runtime else None
-    if store is None and cfg.share_cache:
-        # match the serial path: one shared memo even without --store
-        store = RecordStore()
-    ex = SearchExecutor(
-        store=store,
-        checkpoint=runtime.checkpoint if runtime else None,
-        max_workers=args.workers,
-        budget=runtime.budget if runtime else None,
-        checkpoint_every=args.checkpoint_every,
-    )
-    t0 = time.monotonic()
-    jobs = scenario_jobs(
-        runner.scenarios,
-        runner.nas_space,
-        runner.acc_fn,
-        cfg.search,
-        driver=cfg.driver,
-        backend=cfg.backend,
-    )
-    report = ex.run(jobs)
-    for name, err in report.errors.items():
-        raise RuntimeError(f"search {name} failed") from err
-    if report.interrupted:
-        for name in report.interrupted:
-            print(f"interrupted: {name}")
-        return None
-    results = [
-        (sc, report.outcomes[f"sweep.{sc.name}"].result) for sc in runner.scenarios
-    ]
-    return sweep.assemble_result(
-        results,
-        objectives=cfg.objectives,
-        store_stats=report.store_stats,
-        wall_s=time.monotonic() - t0,
-    )
 
 
 if __name__ == "__main__":

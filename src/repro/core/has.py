@@ -66,7 +66,11 @@ TABLE1 = {
 
 def has_space() -> Space:
     choices = [Choice(k, tuple(v)) for k, v in TABLE1.items()]
-    return Space(choices, decoder=lambda d: AcceleratorConfig(**d), name="has")
+    space = Space(choices, decoder=lambda d: AcceleratorConfig(**d), name="has")
+    # provenance makes the space picklable (rebuilt via this factory in the
+    # receiving process — see space.Space.provenance)
+    space.provenance = (f"{__name__}:has_space", {})
+    return space
 
 
 def baseline_vec(space: Space) -> np.ndarray:

@@ -83,29 +83,43 @@ def _blockwise_space(
     return Space(choices, decode, name)
 
 
+def _stamped(space: Space, factory: str, **kw) -> Space:
+    # provenance makes registry spaces picklable (rebuilt via the factory in
+    # the receiving process — see space.Space.provenance)
+    space.provenance = (f"{__name__}:{factory}", kw)
+    return space
+
+
 def s1_mobilenetv2(num_classes=1000, image_size=224) -> Space:
     base = C.mobilenet_v2(num_classes, image_size)
-    return _blockwise_space(base, "s1_mbv2")
+    return _stamped(_blockwise_space(base, "s1_mbv2"), "s1_mobilenetv2",
+                    num_classes=num_classes, image_size=image_size)
 
 
 def s2_efficientnet(num_classes=1000, image_size=224,
                     se=False, swish=False) -> Space:
     base = C.efficientnet_b0(num_classes, image_size, se=se, swish=swish)
-    return _blockwise_space(base, "s2_effnet")
+    return _stamped(_blockwise_space(base, "s2_effnet"), "s2_efficientnet",
+                    num_classes=num_classes, image_size=image_size,
+                    se=se, swish=swish)
 
 
 def s3_evolved(num_classes=1000, image_size=224) -> Space:
     """The evolved EdgeTPU space: SE/Swish removed (they are 'not supported or
     inefficient in many specialized accelerators'), Fused-IBN enabled."""
     base = C.efficientnet_b0(num_classes, image_size, se=False, swish=False)
-    return _blockwise_space(base, "s3_evolved", evolved=True)
+    return _stamped(_blockwise_space(base, "s3_evolved", evolved=True),
+                    "s3_evolved", num_classes=num_classes,
+                    image_size=image_size)
 
 
 def tiny_space(num_classes=10, image_size=32, blocks=4) -> Space:
     """Reduced space for CPU-runnable end-to-end searches (tests/examples)."""
     base = C.mobilenet_v2(num_classes, image_size, width=0.35)
     base = replace(base, blocks=base.blocks[:blocks], head_filters=256)
-    return _blockwise_space(base, "tiny", evolved=True)
+    return _stamped(_blockwise_space(base, "tiny", evolved=True), "tiny_space",
+                    num_classes=num_classes, image_size=image_size,
+                    blocks=blocks)
 
 
 SPACES = {

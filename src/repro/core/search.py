@@ -56,13 +56,12 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import has as has_lib
 from repro.core.controllers import CONTROLLERS
 from repro.core.engine import EvaluationEngine, RecordStore
 from repro.core.pareto import DEFAULT_OBJECTIVES, ParetoFrontier
 from repro.core.reward import RewardConfig
 from repro.core.scenarios import Scenario
-from repro.core.space import Space, concat
+from repro.core.space import Space
 
 
 @dataclasses.dataclass
@@ -264,6 +263,26 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
                         engine.stats.as_dict())
 
 
+# ---------------------------------------------------------------------------
+# Legacy driver entrypoints. These are thin wrappers over
+# ``repro.core.session.SearchSession``, which owns engine/backend/runtime
+# resolution (and the deprecation of the ``predictor=`` shim) in one place;
+# the signatures below are kept verbatim for compatibility. New code should
+# construct a ``SearchSession``.
+# ---------------------------------------------------------------------------
+
+
+def _session(nas_space, acc_fn, has_space=None, engine=None, predictor=None,
+             backend=None, runtime=None, checkpoint_dir=None):
+    from repro.core.session import SearchSession  # deferred: session imports us
+
+    return SearchSession(
+        nas_space, acc_fn,
+        has_space=has_space, engine=engine, predictor=predictor,
+        backend=backend, runtime=runtime, checkpoint_dir=checkpoint_dir,
+    )
+
+
 def joint_search(
     nas_space: Space,
     acc_fn: Callable,
@@ -278,27 +297,11 @@ def joint_search(
     checkpoint_dir: Optional[str] = None,
     tag: str = "joint",
 ) -> SearchResult:
-    rcfg = _objective(rcfg, scenario)
-    runtime = _as_runtime(runtime, checkpoint_dir)
-    has_space = has_space or has_lib.has_space()
-    joint = concat(nas_space, has_space)
-    if engine is not None and (predictor is not None or backend is not None):
-        raise ValueError("pass either engine= or predictor=/backend=, not "
-                         "both — a prebuilt engine already fixes its backend")
-    if engine is None:
-        engine = EvaluationEngine(
-            nas_space, has_space, acc_fn, rcfg,
-            proxy_batch=cfg.proxy_batch, cache=cfg.cache, predictor=predictor,
-            backend=backend,
-            store=_runtime_store(cfg, runtime),
-            label=None if scenario is None else scenario.name,
-        )
-    warm = None
-    if cfg.hot_start and cfg.controller in ("ppo", "reinforce"):
-        base = has_lib.baseline_vec(has_space)
-        warm = (nas_space.num_decisions, base, cfg.hot_start_logit)
-    return _drive(joint, engine, cfg, warm_has=warm, scenario=scenario,
-                  runtime=runtime, tag=tag)
+    return _session(
+        nas_space, acc_fn, has_space=has_space, engine=engine,
+        predictor=predictor, backend=backend, runtime=runtime,
+        checkpoint_dir=checkpoint_dir,
+    ).joint(rcfg=rcfg, scenario=scenario, cfg=cfg, tag=tag)
 
 
 def fixed_hw_search(
@@ -314,21 +317,10 @@ def fixed_hw_search(
     checkpoint_dir: Optional[str] = None,
     tag: str = "fixed_hw",
 ) -> SearchResult:
-    rcfg = _objective(rcfg, scenario)
-    runtime = _as_runtime(runtime, checkpoint_dir)
-    h = h or has_lib.BASELINE
-    if engine is not None and backend is not None:
-        raise ValueError("pass either engine= or backend=, not both — "
-                         "a prebuilt engine already fixes its backend")
-    if engine is None:
-        engine = EvaluationEngine(
-            nas_space, None, acc_fn, rcfg, fixed_h=h, backend=backend,
-            proxy_batch=cfg.proxy_batch, cache=cfg.cache,
-            store=_runtime_store(cfg, runtime),
-            label=None if scenario is None else scenario.name,
-        )
-    return _drive(nas_space, engine, cfg, scenario=scenario,
-                  runtime=runtime, tag=tag)
+    return _session(
+        nas_space, acc_fn, engine=engine, backend=backend,
+        runtime=runtime, checkpoint_dir=checkpoint_dir,
+    ).fixed_hw(rcfg=rcfg, scenario=scenario, h=h, cfg=cfg, tag=tag)
 
 
 def phase_search(
@@ -344,43 +336,13 @@ def phase_search(
     tag: str = "phase",
 ) -> SearchResult:
     """Fig. 9: phase 1 = HAS on a fixed initial architecture (soft constraint),
-    phase 2 = NAS on the selected accelerator (hard constraint). The sample
-    budget is split between the phases. With a runtime checkpointer, each
-    phase checkpoints under its own sub-tag; a completed phase replays from
-    its checkpoint on resume instead of re-searching."""
-    rcfg = _objective(rcfg, scenario)
-    runtime = _as_runtime(runtime, checkpoint_dir)
-    hspace = has_lib.has_space()
-    rng = np.random.default_rng(cfg.seed)
-    a0 = (initial_arch_vec if initial_arch_vec is not None
-          else nas_space.sample(rng))
-    spec0 = nas_space.decode(a0)
-    soft = dataclasses.replace(rcfg, mode="soft")
-    acc0 = acc_fn(spec0)
-
-    h_engine = EvaluationEngine(
-        None, hspace, None, soft, fixed_spec=spec0, fixed_acc=acc0,
-        constraint_mode="area_only", proxy_batch=cfg.proxy_batch,
-        cache=cfg.cache, backend=backend,
-        store=_runtime_store(cfg, runtime),
-        label=None if scenario is None else scenario.name,
-    )
-    half = dataclasses.replace(cfg, samples=cfg.samples // 2)
-    phase1 = _drive(hspace, h_engine, half, scenario=scenario,
-                    runtime=runtime, tag=f"{tag}.has")
-    h_best = (hspace.decode(phase1.best_vec) if phase1.best_vec is not None
-              else has_lib.BASELINE)
-    phase2 = fixed_hw_search(
-        nas_space, acc_fn, rcfg,
-        dataclasses.replace(cfg, samples=cfg.samples - half.samples),
-        h=h_best, backend=backend, scenario=scenario, runtime=runtime,
-        tag=f"{tag}.nas",
-    )
-    history = phase1.history + phase2.history
-    return SearchResult(phase2.best_vec, phase2.best_record, history,
-                        nas_space, phase1.wall_s + phase2.wall_s,
-                        {"phase1": phase1.engine_stats,
-                         "phase2": phase2.engine_stats})
+    phase 2 = NAS on the selected accelerator (hard constraint). See
+    ``SearchSession.phase``."""
+    return _session(
+        nas_space, acc_fn, backend=backend,
+        runtime=runtime, checkpoint_dir=checkpoint_dir,
+    ).phase(rcfg=rcfg, scenario=scenario, initial_arch_vec=initial_arch_vec,
+            cfg=cfg, tag=tag)
 
 
 def nested_search(
@@ -396,35 +358,8 @@ def nested_search(
     tag: str = "nested",
 ) -> SearchResult:
     """Outer loop over hardware samples; a small NAS per hardware config.
-    Each inner NAS checkpoints under its own sub-tag; the outer hardware
-    draws are deterministic from the seed, so resume replays completed
-    inners from their checkpoints and re-derives the h sequence for free."""
-    rcfg = _objective(rcfg, scenario)
-    runtime = _as_runtime(runtime, checkpoint_dir)
-    hspace = has_lib.has_space()
-    rng = np.random.default_rng(cfg.seed)
-    inner_budget = max(cfg.samples // outer, 4)
-    history = []
-    best, best_vec = None, None
-    t0 = time.monotonic()
-    stats: dict = {}
-    for o in range(outer):
-        hv = hspace.sample(rng)
-        h = hspace.decode(hv)
-        res = fixed_hw_search(
-            nas_space, acc_fn, rcfg,
-            dataclasses.replace(cfg, samples=inner_budget, seed=cfg.seed + o),
-            h=h, backend=backend, scenario=scenario, runtime=runtime,
-            tag=f"{tag}.outer{o}",
-        )
-        history.extend(res.history)
-        for key, v in res.engine_stats.items():  # aggregate over inner runs
-            if key != "hit_rate":
-                stats[key] = stats.get(key, 0) + v
-        if res.best_record is not None and (
-            best is None or res.best_record["reward"] > best["reward"]
-        ):
-            best, best_vec = res.best_record, res.best_vec
-    stats["hit_rate"] = stats["cache_hits"] / max(stats["requested"], 1)
-    return SearchResult(best_vec, best, history, nas_space,
-                        time.monotonic() - t0, stats)
+    See ``SearchSession.nested``."""
+    return _session(
+        nas_space, acc_fn, backend=backend,
+        runtime=runtime, checkpoint_dir=checkpoint_dir,
+    ).nested(rcfg=rcfg, scenario=scenario, outer=outer, cfg=cfg, tag=tag)

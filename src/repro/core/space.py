@@ -22,13 +22,43 @@ class Choice:
         return len(self.options)
 
 
+def _space_from_state(cls, state: dict) -> "Space":
+    sp = cls.__new__(cls)
+    sp.__dict__.update(state)
+    return sp
+
+
+def _space_from_provenance(path: str, kw_items: tuple) -> "Space":
+    """Pickle reconstructor: re-run the registered factory (see
+    ``Space.provenance``) — spaces are code, so shipping the factory call
+    instead of the decoder closure is what makes them process-portable."""
+    import importlib
+
+    mod_name, _, fn_name = path.partition(":")
+    return getattr(importlib.import_module(mod_name), fn_name)(**dict(kw_items))
+
+
 @dataclasses.dataclass
 class Space:
-    """An ordered set of decision points + a decoder into a concrete config."""
+    """An ordered set of decision points + a decoder into a concrete config.
+
+    ``provenance`` — optional ``("module:factory", kwargs)`` stamped by the
+    registered space factories (``nas.SPACES``, ``has.has_space``): a space
+    carrying it pickles as the factory call and is rebuilt bit-identically in
+    another process (the multi-process executor ships jobs this way); without
+    it, pickling falls back to the default path, which fails on the decoder
+    closure."""
 
     choices: list[Choice]
     decoder: Callable[[dict], Any] = lambda d: d
     name: str = "space"
+    provenance: Any = None
+
+    def __reduce__(self):
+        if self.provenance is not None:
+            path, kw = self.provenance
+            return (_space_from_provenance, (path, tuple(sorted(kw.items()))))
+        return (_space_from_state, (self.__class__, dict(self.__dict__)))
 
     @property
     def num_decisions(self) -> int:

@@ -72,6 +72,15 @@ class SweepConfig:
     # checkpoint every batch and the sweep resumes mid-scenario (see
     # repro.runtime; an explicit runtime passed to run() wins)
     checkpoint_dir: Optional[str] = None
+    # concurrent execution (repro.runtime.SearchExecutor): workers > 0 fans
+    # the scenarios over N threads — or, with processes=True, shards them
+    # across N spawned worker processes with single-writer log-shipping
+    # store segments (needs a durable store, or no store for private
+    # worker caches). devices_per_worker forces that many simulated XLA
+    # host devices into each worker's environment.
+    workers: int = 0
+    processes: bool = False
+    devices_per_worker: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -243,9 +252,12 @@ class SweepRunner:
         same runtime resumes: completed scenarios replay from their
         checkpoints, the interrupted one continues mid-search, and a run
         whose budget expires raises ``search.SearchInterrupted`` after
-        checkpointing."""
+        checkpointing. With ``cfg.workers > 0`` the scenarios run
+        concurrently (``run_concurrent``)."""
         cfg = self.cfg
         runtime = search_lib._as_runtime(runtime, cfg.checkpoint_dir)
+        if cfg.workers > 0:
+            return self.run_concurrent(verbose=verbose, runtime=runtime)
         # honor a caller-provided store (cross-run / cross-sweep reuse), then
         # the runtime's shared store; otherwise build one per run when
         # sharing is on
@@ -283,6 +295,78 @@ class SweepRunner:
             results,
             objectives=cfg.objectives,
             store_stats=None if store is None else store.stats.as_dict(),
+            wall_s=time.monotonic() - t0,
+        )
+
+    def run_concurrent(self, verbose: bool = False, runtime=None) -> SweepResult:
+        """The same sweep through ``repro.runtime.SearchExecutor``:
+        ``cfg.workers`` threads, or that many sharded worker processes with
+        ``cfg.processes`` (single-writer log-shipping store segments, merged
+        back on return). Identical seeds per scenario make the per-scenario
+        histories bitwise-equal to a serial ``run()``. Raises the first
+        per-scenario error, or ``search.SearchInterrupted`` when any search
+        stopped on the budget/deadline (in-flight state checkpointed first
+        when the runtime has a checkpointer)."""
+        from repro.runtime import SearchExecutor, scenario_jobs
+
+        cfg = self.cfg
+        runtime = search_lib._as_runtime(runtime, cfg.checkpoint_dir)
+        store = cfg.search.store
+        if store is None and runtime is not None:
+            store = getattr(runtime, "store", None)
+        if store is None and cfg.share_cache and not cfg.processes:
+            # match the serial path: one shared in-memory memo — threads
+            # only; process workers without a durable store run private
+            # caches (values are identical either way, sharing only skips
+            # re-simulation)
+            store = RecordStore()
+        ex = SearchExecutor(
+            store=store,
+            checkpoint=None if runtime is None else runtime.checkpoint,
+            max_workers=cfg.workers,
+            budget=None if runtime is None else runtime.budget,
+            checkpoint_every=1 if runtime is None else runtime.checkpoint_every,
+            objectives=cfg.objectives,
+            processes=cfg.processes,
+            devices_per_worker=cfg.devices_per_worker,
+        )
+        t0 = time.monotonic()
+        # the executor's runtime carries the store; jobs must not also pin it
+        # (an in-memory store inside job kwargs would not survive pickling)
+        jobs = scenario_jobs(
+            self.scenarios,
+            self.nas_space,
+            self.acc_fn,
+            dataclasses.replace(cfg.search, store=None),
+            driver=cfg.driver,
+            backend=cfg.backend,
+        )
+        if verbose:
+            mode = "processes" if cfg.processes else "threads"
+            print(
+                f"[sweep] {len(jobs)} scenarios on {cfg.workers} {mode} "
+                f"({cfg.driver}, {cfg.search.samples} samples each)",
+                flush=True,
+            )
+        report = ex.run(jobs)
+        for name, err in report.errors.items():
+            raise RuntimeError(f"search {name} failed") from err
+        interrupted = report.interrupted
+        if interrupted:
+            err = report.outcomes[interrupted[0]].error
+            if isinstance(err, search_lib.SearchInterrupted):
+                raise err
+            raise search_lib.SearchInterrupted(
+                interrupted[0], 0, cfg.search.samples
+            ) from err
+        results = [
+            (sc, report.outcomes[f"sweep.{sc.name}"].result)
+            for sc in self.scenarios
+        ]
+        return assemble_result(
+            results,
+            objectives=cfg.objectives,
+            store_stats=report.store_stats,
             wall_s=time.monotonic() - t0,
         )
 

@@ -3,20 +3,27 @@
 The production layer over ``repro.core``'s search stack:
 
 * ``DurableRecordStore`` — the engine's raw-metric memo with an append-only
-  JSONL log: a new process rehydrates it and starts at the prior hit rate
+  JSONL log: a new process rehydrates it and starts at the prior hit rate.
+  Under the sharded executor each worker process appends to its own
+  single-writer segment (``<log>.worker-<k>``); the base store folds
+  segments in on ``refresh()`` and merges + retires them on ``compact()``
   (``repro.runtime.store``);
 * ``Checkpointer`` — atomic tagged snapshots of controller + search
   progress; resume reproduces the bitwise-identical remaining trajectory
   (``repro.runtime.checkpoint``);
 * ``SearchRuntime`` / ``Budget`` / ``StopToken`` / ``SearchExecutor`` —
   budgeted, gracefully-stoppable concurrent execution of many searches over
-  one shared store (``repro.runtime.executor``).
+  one shared store: threads by default, sharded spawn-based worker
+  processes with ``processes=True`` (``repro.runtime.executor``);
+* ``repro.runtime.cli`` — the argparse parent + runtime resolution shared
+  by ``scripts/sweep.py`` and ``scripts/runtime_serve.py``.
 
 Entry points: pass ``runtime=SearchRuntime.at(dir, store_path)`` (or just
-``checkpoint_dir=``) to any ``repro.core.search`` driver or
-``sweep.SweepRunner``; ``scripts/sweep.py --store/--resume`` and
+``checkpoint_dir=``) to any ``repro.core.search`` driver /
+``core.session.SearchSession`` / ``sweep.SweepRunner``;
+``scripts/sweep.py --store/--resume [--workers N --processes]`` and
 ``scripts/runtime_serve.py`` are the CLIs. See docs/architecture.md
-("Search runtime").
+("Search runtime", "Distributed search").
 """
 from repro.runtime.checkpoint import (
     Checkpointer,
@@ -24,18 +31,23 @@ from repro.runtime.checkpoint import (
     result_state,
 )
 from repro.runtime.executor import (
+    SELFKILL_ENV,
     Budget,
     ExecutorReport,
     JobOutcome,
     SearchExecutor,
     SearchJob,
     SearchRuntime,
+    SharedBudget,
     StopToken,
+    WorkerCrashed,
+    WorkerError,
     scenario_jobs,
 )
 from repro.runtime.store import DurableRecordStore
 
 __all__ = [
+    "SELFKILL_ENV",
     "Budget",
     "Checkpointer",
     "DurableRecordStore",
@@ -44,7 +56,10 @@ __all__ = [
     "SearchExecutor",
     "SearchJob",
     "SearchRuntime",
+    "SharedBudget",
     "StopToken",
+    "WorkerCrashed",
+    "WorkerError",
     "result_from_state",
     "result_state",
     "scenario_jobs",

@@ -1,28 +1,52 @@
 """Concurrent multi-search execution over one shared record store.
 
 ``SearchExecutor`` runs N searches (typically one per deployment scenario)
-on a thread pool against a single ``RecordStore`` /
-``DurableRecordStore``. Python threads are the right concurrency unit here:
-the engine's batched ``simulator.simulate_batch`` path spends its time in
-numpy, and controller updates in jax — both release the GIL — so concurrent
-searches overlap one search's controller update with another's evaluation
-pass, and every evaluation lands in the shared memo where sibling searches
-hit it for free (the sweep's cross-scenario amortization, now concurrent).
+under one ``SearchRuntime``, on either of two backends:
+
+* **threads** (default): the engine's batched ``simulator.simulate_batch``
+  path spends its time in numpy, and controller updates in jax — both
+  release the GIL — so concurrent searches overlap one search's controller
+  update with another's evaluation pass against a single shared
+  ``RecordStore`` / ``DurableRecordStore``;
+* **processes** (``processes=True``): the sharded executor. Jobs are
+  partitioned round-robin across ``max_workers`` spawned worker processes;
+  each worker owns its full Python runtime (no GIL sharing, its own jax) and
+  is the **single writer** of its own store segment
+  (``store.jsonl.worker-<k>``, see ``repro.runtime.store``) — no cross-
+  process lock on the hot path. Results ship back as ``result_state``
+  payloads over a queue; the parent merges frontiers, aggregates worker
+  store stats, and ``refresh()``-es its own store so the segments' records
+  are immediately visible (log shipping). ``devices_per_worker=N`` exports
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to the workers for
+  simulated multi-device runs.
+
+Per-scenario trajectories are bitwise-identical across serial, thread and
+process execution: a search's trajectory depends only on its seed,
+controller state and the (deterministic, content-addressed) record values —
+sharing evaluations changes who *pays* for a record, never its bytes.
 
 Scheduling is budgeted: a ``Budget`` grants evaluation tokens (samples)
 and/or wall-clock until a deadline; ``SearchRuntime.admit`` is consulted by
 every driver at each batch boundary, and a denial makes the driver
 checkpoint (when a ``Checkpointer`` is attached) and raise
-``SearchInterrupted``. ``SearchExecutor.stop()`` is the graceful stop: it
-trips the shared ``StopToken`` so every in-flight search checkpoints at its
-next batch boundary; a later run with the same checkpoint directory resumes
-all of them, completed ones replaying for free.
+``SearchInterrupted``. In process mode the budget lives in shared memory and
+the stop token is mirrored to a process event, so admission stays a single
+global decision. ``SearchExecutor.stop()`` is the graceful stop: every
+in-flight search checkpoints at its next batch boundary; a later run with
+the same checkpoint directory resumes all of them, completed ones replaying
+for free — including searches a killed or crashed worker left behind.
 """
+
 from __future__ import annotations
 
 import dataclasses
+import multiprocessing
+import os
+import pickle
+import queue as queue_lib
 import threading
 import time
+import traceback
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Callable, Optional, Union
@@ -31,8 +55,14 @@ from repro.core.engine import RecordStore
 from repro.core.pareto import DEFAULT_OBJECTIVES, ParetoFrontier
 from repro.core.search import SearchInterrupted, SearchResult
 
-from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.checkpoint import Checkpointer, result_from_state, result_state
+
 from repro.runtime.store import DurableRecordStore
+
+# test/CI hook: "<worker_id>:<admits>" makes that worker hard-exit (os._exit,
+# as a kill -9 would) after its Nth admission — a deterministic mid-search
+# death for kill-one-worker recovery tests
+SELFKILL_ENV = "REPRO_EXECUTOR_SELFKILL"
 
 
 class StopToken:
@@ -41,13 +71,29 @@ class StopToken:
     def __init__(self):
         self._event = threading.Event()
         self.reason: Optional[str] = None
+        self._mirrors: list = []  # process events to trip alongside (run())
 
     def set(self, reason: str = "stop requested") -> None:
         self.reason = reason
         self._event.set()
+        for m in list(self._mirrors):
+            m.set()
 
     def is_set(self) -> bool:
         return self._event.is_set()
+
+    def mirror(self, event) -> None:
+        """Trip ``event`` (e.g. a ``multiprocessing.Event``) whenever this
+        token trips — how a parent's stop() reaches spawned workers."""
+        self._mirrors.append(event)
+        if self.is_set():
+            event.set()
+
+    def unmirror(self, event) -> None:
+        try:
+            self._mirrors.remove(event)
+        except ValueError:
+            pass
 
 
 class Budget:
@@ -87,6 +133,43 @@ class Budget:
             return True
 
 
+class SharedBudget:
+    """The ``Budget`` surface over cross-process shared state: the granted
+    counter and exhausted latch live in shared memory (one admission decision
+    fleet-wide), the deadline is an absolute epoch so every process measures
+    the same clock. Workers build one from ``Budget.share()``'s spec."""
+
+    def __init__(self, granted, exhausted, max_samples, deadline_epoch):
+        self._granted = granted      # multiprocessing.Value("q")
+        self._exhausted = exhausted  # multiprocessing.Value("b")
+        self.max_samples = max_samples
+        self.deadline_epoch = deadline_epoch
+
+    @property
+    def granted(self) -> int:
+        return int(self._granted.value)
+
+    @property
+    def exhausted(self) -> bool:
+        return bool(self._exhausted.value)
+
+    def admit(self, n: int) -> bool:
+        with self._granted.get_lock():
+            if self._exhausted.value:
+                return False
+            if self.deadline_epoch is not None and time.time() >= self.deadline_epoch:
+                self._exhausted.value = True
+                return False
+            if (
+                self.max_samples is not None
+                and self._granted.value + n > self.max_samples
+            ):
+                self._exhausted.value = True
+                return False
+            self._granted.value += n
+            return True
+
+
 @dataclasses.dataclass
 class SearchRuntime:
     """The durability/scheduling bundle drivers accept as ``runtime=``:
@@ -118,6 +201,27 @@ class SearchRuntime:
         return True
 
 
+class _SelfKillRuntime:
+    """Wrap a runtime so the process hard-exits after N admissions (the
+    ``SELFKILL_ENV`` test hook): the driver has checkpointed the prior
+    batches and appended their records to this worker's segment, so death
+    lands mid-search with partial durable progress — exactly what a
+    preempted worker leaves behind."""
+
+    def __init__(self, inner: SearchRuntime, admits_left: int):
+        self._inner = inner
+        self._admits_left = admits_left
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def admit(self, n: int) -> bool:
+        if self._admits_left <= 0:
+            os._exit(137)
+        self._admits_left -= 1
+        return self._inner.admit(n)
+
+
 @dataclasses.dataclass
 class SearchJob:
     """One named search: ``fn(**kwargs, runtime=, tag=)`` must return a
@@ -136,12 +240,27 @@ class JobOutcome:
     error: Optional[BaseException] = None
 
 
+class WorkerCrashed(RuntimeError):
+    """A worker process died (kill/preemption/crash) before finishing a job.
+    The job's last checkpoint and its segment's appended records survive, so
+    a re-run with the same runtime resumes it."""
+
+
+class WorkerError(RuntimeError):
+    """An exception raised inside a worker process, re-raised parent-side
+    with the worker's traceback text."""
+
+
 @dataclasses.dataclass
 class ExecutorReport:
     outcomes: dict[str, JobOutcome]
     frontier: ParetoFrontier
     store_stats: Optional[dict]
     wall_s: float
+    # process mode extras: wall clock until every worker was imported+ready
+    # (jax import + space rebuild), and the job -> worker shard map
+    spawn_s: Optional[float] = None
+    shards: Optional[dict[str, int]] = None
 
     @property
     def done(self) -> list[str]:
@@ -156,8 +275,81 @@ class ExecutorReport:
         return {n: o.error for n, o in self.outcomes.items() if o.status == "error"}
 
 
+def _ship_error(e: BaseException) -> dict:
+    return {"type": type(e).__name__, "repr": repr(e),
+            "traceback": traceback.format_exc()}
+
+
+def _process_worker(
+    worker_id: int,
+    payload: bytes,
+    store_path,
+    checkpoint_root,
+    checkpoint_every: int,
+    budget_spec: Optional[dict],
+    stop_event,
+    go_event,
+    out_q,
+) -> None:
+    """Worker main: run this shard's jobs serially, append evaluations to our
+    own store segment, ship each outcome as it completes. Spawned (not
+    forked): jax state is never shared with the parent, and XLA_FLAGS set by
+    the parent before start() are honored on this process's first jax
+    import."""
+    try:
+        jobs: list[SearchJob] = pickle.loads(payload)
+        budget = None if budget_spec is None else SharedBudget(**budget_spec)
+        store = None
+        if store_path is not None:
+            store = DurableRecordStore(store_path, segment=worker_id)
+        checkpoint = (
+            None if checkpoint_root is None else Checkpointer(checkpoint_root)
+        )
+        runtime = SearchRuntime(
+            store=store,
+            checkpoint=checkpoint,
+            budget=budget,
+            stop=stop_event,  # multiprocessing.Event has the StopToken surface
+            checkpoint_every=checkpoint_every,
+        )
+        spec = os.environ.get(SELFKILL_ENV)
+        if spec:
+            wid, _, admits = spec.partition(":")
+            if int(wid) == worker_id:
+                runtime = _SelfKillRuntime(runtime, int(admits))
+        out_q.put(("ready", worker_id, None))
+        if go_event is not None:
+            go_event.wait()
+        for job in jobs:
+            try:
+                res = job.fn(**job.kwargs, runtime=runtime, tag=job.name)
+                out_q.put(("done", job.name, result_state(res)))
+            except SearchInterrupted as e:
+                out_q.put(
+                    (
+                        "interrupted",
+                        job.name,
+                        {"tag": e.tag, "samples_done": e.samples_done,
+                         "samples": e.samples},
+                    )
+                )
+            except Exception as e:  # noqa: BLE001 - isolate sibling searches
+                out_q.put(("error", job.name, _ship_error(e)))
+        stats = None
+        if store is not None:
+            store.flush()
+            stats = dict(store.stats.as_dict())
+            stats["appended"] = store.appended
+            store.close()
+        out_q.put(("exit", worker_id, stats))
+    except BaseException as e:  # noqa: BLE001 - ship, don't die silently
+        out_q.put(("fatal", worker_id, _ship_error(e)))
+
+
 class SearchExecutor:
-    """Run many searches concurrently under one ``SearchRuntime``."""
+    """Run many searches concurrently under one ``SearchRuntime``
+    (module doc: threads by default, sharded worker processes with
+    ``processes=True``)."""
 
     def __init__(
         self,
@@ -167,9 +359,21 @@ class SearchExecutor:
         budget: Optional[Budget] = None,
         checkpoint_every: int = 1,
         objectives=DEFAULT_OBJECTIVES,
+        processes: bool = False,
+        devices_per_worker: Optional[int] = None,
+        sync_start: bool = False,
     ):
         self.max_workers = max_workers
         self.objectives = objectives
+        self.processes = processes
+        # XLA_FLAGS=--xla_force_host_platform_device_count=N for each worker
+        # (simulated multi-device; workers import jax fresh, so the flag is
+        # honored even though the parent's jax is already initialized)
+        self.devices_per_worker = devices_per_worker
+        # hold every worker at a barrier until all are imported+ready, and
+        # report the setup time as report.spawn_s — lets benchmarks separate
+        # one-time process spin-up from steady-state search throughput
+        self.sync_start = sync_start
         self.stop_token = StopToken()
         self.runtime = SearchRuntime(
             store=store,
@@ -181,7 +385,8 @@ class SearchExecutor:
 
     def stop(self, reason: str = "stop requested") -> None:
         """Graceful stop: in-flight searches checkpoint at their next batch
-        boundary and report ``interrupted``."""
+        boundary and report ``interrupted`` (process workers see the mirrored
+        event)."""
         self.stop_token.set(reason)
 
     def run(self, jobs: list[SearchJob]) -> ExecutorReport:
@@ -190,6 +395,8 @@ class SearchExecutor:
         names = [j.name for j in jobs]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate job names: {names}")
+        if self.processes:
+            return self._run_processes(jobs)
         t0 = time.monotonic()
 
         def run_one(job: SearchJob) -> JobOutcome:
@@ -217,6 +424,234 @@ class SearchExecutor:
             store_stats=None if store is None else store.stats.as_dict(),
             wall_s=time.monotonic() - t0,
         )
+
+    # ---- process mode -----------------------------------------------------
+
+    def _store_path(self) -> Optional[Path]:
+        store = self.runtime.store
+        if store is None:
+            return None
+        if not isinstance(store, DurableRecordStore):
+            raise ValueError(
+                "process mode shares evaluations through a DurableRecordStore "
+                "(workers append to per-worker segments of its log); an "
+                "in-memory RecordStore cannot cross process boundaries — "
+                "pass a durable store or store=None (private worker caches)"
+            )
+        if store.read_only or store.segment is not None:
+            raise ValueError(
+                "process mode needs the writable base store (not read_only, "
+                "not itself a segment writer)"
+            )
+        return store.path
+
+    @staticmethod
+    def _shard(jobs: list[SearchJob], k: int) -> list[list[SearchJob]]:
+        """Deterministic round-robin partition: job i -> worker i % k."""
+        return [jobs[i::k] for i in range(k)]
+
+    def _run_processes(self, jobs: list[SearchJob]) -> ExecutorReport:
+        t0 = time.monotonic()
+        runtime = self.runtime
+        store_path = self._store_path()
+        k = max(1, min(self.max_workers, len(jobs)))
+        shards = self._shard(jobs, k)
+        payloads = []
+        for wid, shard in enumerate(shards):
+            try:
+                payloads.append(pickle.dumps(shard))
+            except Exception as e:
+                raise ValueError(
+                    f"process mode ships jobs by pickle and worker {wid}'s "
+                    f"shard does not serialize ({e}); use registry spaces "
+                    f"(repro.core.nas.SPACES / has.has_space — they carry "
+                    f"pickle provenance) and a picklable backend, or run "
+                    f"thread mode (processes=False)"
+                ) from e
+        ctx = multiprocessing.get_context("spawn")  # never fork jax state
+        out_q = ctx.Queue()
+        stop_event = ctx.Event()
+        self.stop_token.mirror(stop_event)
+        go_event = ctx.Event() if self.sync_start else None
+        budget_spec = None
+        budget = runtime.budget
+        if budget is not None:
+            deadline_epoch = None
+            if budget.deadline_s is not None:
+                deadline_epoch = time.time() + max(
+                    budget.deadline_s - budget.elapsed_s(), 0.0
+                )
+            budget_spec = dict(
+                granted=ctx.Value("q", budget.granted),
+                exhausted=ctx.Value("b", budget.exhausted),
+                max_samples=budget.max_samples,
+                deadline_epoch=deadline_epoch,
+            )
+        checkpoint_root = (
+            None if runtime.checkpoint is None else str(runtime.checkpoint.root)
+        )
+        saved_flags = os.environ.get("XLA_FLAGS")
+        if self.devices_per_worker:
+            flag = (
+                f"--xla_force_host_platform_device_count="
+                f"{self.devices_per_worker}"
+            )
+            os.environ["XLA_FLAGS"] = f"{saved_flags} {flag}" if saved_flags else flag
+        procs: list = []
+        try:
+            for wid, payload in enumerate(payloads):
+                p = ctx.Process(
+                    target=_process_worker,
+                    args=(
+                        wid,
+                        payload,
+                        store_path,
+                        checkpoint_root,
+                        runtime.checkpoint_every,
+                        budget_spec,
+                        stop_event,
+                        go_event,
+                        out_q,
+                    ),
+                    daemon=True,
+                )
+                p.start()
+                procs.append(p)
+        finally:
+            if self.devices_per_worker:
+                if saved_flags is None:
+                    os.environ.pop("XLA_FLAGS", None)
+                else:
+                    os.environ["XLA_FLAGS"] = saved_flags
+
+        outcomes: dict[str, JobOutcome] = {}
+        worker_stats: dict[int, Optional[dict]] = {}
+        fatals: dict[int, dict] = {}
+        ready: set[int] = set()
+        spawn_s: Optional[float] = None
+
+        def handle(kind: str, who, payload) -> None:
+            nonlocal spawn_s
+            if kind == "ready":
+                ready.add(who)
+            elif kind == "done":
+                outcomes[who] = JobOutcome(
+                    who, "done", result=result_from_state(payload, None)
+                )
+            elif kind == "interrupted":
+                outcomes[who] = JobOutcome(
+                    who,
+                    "interrupted",
+                    error=SearchInterrupted(
+                        payload["tag"], payload["samples_done"], payload["samples"]
+                    ),
+                )
+            elif kind == "error":
+                outcomes[who] = JobOutcome(
+                    who,
+                    "error",
+                    error=WorkerError(
+                        f"{payload['repr']}\n{payload['traceback']}"
+                    ),
+                )
+            elif kind == "exit":
+                worker_stats[who] = payload
+            elif kind == "fatal":
+                fatals[who] = payload
+
+        # drain while workers run: a worker's queue put must never block on a
+        # full pipe because the parent is waiting in join()
+        while True:
+            alive = [p for p in procs if p.is_alive()]
+            if go_event is not None and not go_event.is_set():
+                if spawn_s is None and len(ready) >= len(procs):
+                    spawn_s = time.monotonic() - t0
+                    go_event.set()
+                elif not alive:
+                    go_event.set()  # never gate survivors on a dead worker
+            try:
+                handle(*out_q.get(timeout=0.1))
+            except queue_lib.Empty:
+                if not alive:
+                    break
+        while True:  # residual messages buffered after the last worker exited
+            try:
+                handle(*out_q.get(timeout=0.2))
+            except queue_lib.Empty:
+                break
+        for p in procs:
+            p.join()
+        self.stop_token.unmirror(stop_event)
+
+        # sync shared-budget consumption back into the parent's Budget so the
+        # caller's accounting (e.g. CLI summaries) reflects worker admissions
+        if budget is not None and budget_spec is not None:
+            with budget._lock:
+                budget._granted = int(budget_spec["granted"].value)
+                budget.exhausted = bool(budget_spec["exhausted"].value)
+
+        shard_of = {
+            job.name: wid for wid, shard in enumerate(shards) for job in shard
+        }
+        for wid, shard in enumerate(shards):
+            for job in shard:
+                if job.name in outcomes:
+                    continue
+                if wid in fatals:
+                    outcomes[job.name] = JobOutcome(
+                        job.name,
+                        "error",
+                        error=WorkerError(
+                            f"{fatals[wid]['repr']}\n{fatals[wid]['traceback']}"
+                        ),
+                    )
+                else:
+                    outcomes[job.name] = JobOutcome(
+                        job.name,
+                        "interrupted",
+                        error=WorkerCrashed(
+                            f"worker {wid} exited (code {procs[wid].exitcode}) "
+                            f"before finishing {job.name!r}; its checkpoints "
+                            f"and store segment survive — re-run to resume"
+                        ),
+                    )
+
+        frontier = ParetoFrontier(self.objectives)
+        for name in (j.name for j in jobs):
+            o = outcomes[name]
+            if o.result is not None:
+                frontier.add_many(o.result.history)
+
+        store = runtime.store
+        store_stats = None
+        if store is not None:
+            store.refresh()  # log shipping: fold worker segments into memory
+            store.flush()
+            store_stats = self._aggregate_stats(
+                [s for s in worker_stats.values() if s is not None]
+            )
+        return ExecutorReport(
+            outcomes={name: outcomes[name] for name in (j.name for j in jobs)},
+            frontier=frontier,
+            store_stats=store_stats,
+            wall_s=time.monotonic() - t0,
+            spawn_s=spawn_s,
+            shards=shard_of,
+        )
+
+    @staticmethod
+    def _aggregate_stats(stats: list[dict]) -> dict:
+        """Sum the workers' per-segment store counters into one report with
+        the same shape a shared thread-mode store produces."""
+        total = {"gets": 0, "hits": 0, "cross_hits": 0, "puts": 0,
+                 "evictions": 0, "appended": 0}
+        for s in stats:
+            for key in total:
+                total[key] += int(s.get(key, 0))
+        total["hit_rate"] = total["hits"] / max(total["gets"], 1)
+        total["cross_hit_rate"] = total["cross_hits"] / max(total["gets"], 1)
+        total["workers"] = len(stats)
+        return total
 
 
 def scenario_jobs(

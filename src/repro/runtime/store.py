@@ -18,11 +18,31 @@ sessions:
   which is what makes cross-*process* hits sound;
 * **compaction**: duplicates and FIFO-evicted entries accumulate in the log;
   ``compact()`` atomically rewrites it to exactly the live in-memory
-  entries (write temp file, ``os.replace``).
+  entries (write temp file, ``os.replace``, fsync the directory — the
+  rename alone is not durable on POSIX: a crash between the rename and the
+  directory sync can resurrect the pre-compact log).
+
+**Log shipping** (the sharded-executor layout, ``repro.runtime.executor``):
+the single-writer discipline scales to multi-process sweeps by giving each
+worker its own append-only *segment* next to the base log —
+``store.jsonl.worker-<k>`` — via ``segment="<k>"``. A segment store appends
+only to its own file but *loads* the base log plus every sibling segment, so
+workers start warm on everything any prior run persisted. Readers (the base
+store, ``repro.serve``) merge base + segments last-write-wins in a
+deterministic order (base first, then segments sorted by worker index);
+since keys are content-addressed raw metrics, two writers can only ever
+disagree on a key by writing identical bytes, so merge order never changes
+values. ``refresh()`` folds in lines other writers appended since the last
+read (per-file byte offsets; a live writer's in-flight torn tail is left for
+the next refresh), and ``compact()`` on the base store merges and retires
+the segments — the compacted log is exactly the single-file layout the
+serve tier already reads. A directory path is accepted everywhere a
+store path is (``<dir>/store.jsonl``).
 
 Thread-safe like its base class: N concurrent searches
 (``repro.runtime.executor``) can share one durable store.
 """
+
 from __future__ import annotations
 
 import json
@@ -33,9 +53,31 @@ from typing import Optional, Union
 
 from repro.core.engine import RecordStore
 
+_SEGMENT_INFIX = ".worker-"
+
 
 def _dump_line(key: bytes, raw: dict, writer: Optional[str]) -> str:
     return json.dumps({"k": key.hex(), "w": writer, "r": raw}, separators=(",", ":"))
+
+
+def _fsync_dir(path: Path) -> None:
+    """fsync a directory so just-renamed/unlinked entries survive a crash
+    (``os.replace`` makes the swap atomic but not durable: POSIX requires a
+    sync on the *directory* to persist the new entry)."""
+    fd = os.open(str(path), getattr(os, "O_DIRECTORY", os.O_RDONLY))
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - e.g. filesystems without dir fsync
+        pass
+    finally:
+        os.close(fd)
+
+
+def _segment_sort_key(base_name: str, p: Path):
+    """Deterministic segment merge order: numeric worker ids numerically
+    (worker-2 before worker-10), then any non-numeric ids lexically."""
+    suffix = p.name[len(base_name) + len(_SEGMENT_INFIX):]
+    return (0, int(suffix), "") if suffix.isdigit() else (1, 0, suffix)
 
 
 class DurableRecordStore(RecordStore):
@@ -46,7 +88,11 @@ class DurableRecordStore(RecordStore):
     mutating the file — so a reader (``repro.serve``, the serve CLI) can
     rehydrate a *live* log without interfering with a concurrent writer
     (the load tolerates the writer's in-flight torn tail the same way a
-    crash-recovery load does)."""
+    crash-recovery load does).
+
+    ``segment="<k>"`` makes this store the single writer of
+    ``<path>.worker-<k>`` (log shipping, module doc): appends go only to the
+    segment, loads merge base + all segments."""
 
     def __init__(
         self,
@@ -54,41 +100,113 @@ class DurableRecordStore(RecordStore):
         max_entries: int = 1_000_000,
         fsync: bool = False,
         read_only: bool = False,
+        segment: Optional[Union[str, int]] = None,
     ):
         super().__init__(max_entries)
-        self.path = Path(path)
+        path = Path(path)
+        if path.is_dir():
+            path = path / "store.jsonl"
+        self.path = path
         self.fsync = fsync
         self.read_only = read_only
-        self.loaded = 0          # entries rehydrated from the log
-        self.loaded_dropped = 0  # corrupt / torn lines skipped on load
+        self.segment = None if segment is None else str(segment)
+        self.loaded = 0          # entries rehydrated from the log(s) on open
+        self.loaded_dropped = 0  # corrupt / torn lines skipped
+        self.shipped = 0         # entries folded in by refresh() after load
         self.appended = 0        # lines this process appended
         self._file = None
-        if self.path.exists():
-            self._load()
+        self._offsets: dict[Path, int] = {}  # log-shipping read positions
+        self._load()
+
+    # ---- layout -----------------------------------------------------------
+
+    @property
+    def write_path(self) -> Path:
+        """Where this store's appends land: the base log, or this writer's
+        own segment."""
+        if self.segment is None:
+            return self.path
+        return self.path.with_name(f"{self.path.name}{_SEGMENT_INFIX}{self.segment}")
+
+    def segment_paths(self) -> list[Path]:
+        """Sibling worker segments, in deterministic merge order."""
+        if not self.path.parent.exists():
+            return []
+        return sorted(
+            self.path.parent.glob(f"{self.path.name}{_SEGMENT_INFIX}*"),
+            key=lambda p: _segment_sort_key(self.path.name, p),
+        )
+
+    def _log_paths(self) -> list[Path]:
+        return [self.path] + self.segment_paths()
 
     # ---- persistence ------------------------------------------------------
 
     def _load(self) -> None:
-        """Rehydrate the in-memory memo from the log (last write wins)."""
+        """Rehydrate the in-memory memo from the base log + every segment
+        (last write wins, deterministic merge order — module doc)."""
         with self._lock:
-            with open(self.path, "r", encoding="utf-8") as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        ent = json.loads(line)
-                        key = bytes.fromhex(ent["k"])
-                        raw, writer = ent["r"], ent.get("w")
-                    except (ValueError, KeyError, TypeError):
-                        # torn append from a killed writer (or stray bytes):
-                        # skip, keep everything that parsed
-                        self.loaded_dropped += 1
-                        continue
-                    fresh = key not in self._data
-                    self._insert(key, raw, writer)
-                    if fresh:
-                        self.loaded += 1
+            for p in self._log_paths():
+                self.loaded += self._consume(p, count_torn_tail=True)
+
+    def _consume(self, path: Path, count_torn_tail: bool) -> int:
+        """Apply the complete lines appended to ``path`` since the last read;
+        returns the number of *fresh* keys inserted. A trailing line without
+        a newline is a torn append: on load (``count_torn_tail=True``) it is
+        a dead writer's last write — count it dropped and move past it; on
+        refresh it may be a live writer's in-flight append — leave the offset
+        before it so the next refresh picks it up once complete."""
+        off = self._offsets.get(path, 0)
+        try:
+            with open(path, "rb") as f:
+                if off:
+                    f.seek(off)
+                data = f.read()
+        except FileNotFoundError:
+            return 0
+        fresh = 0
+        pos = 0
+        while True:
+            nl = data.find(b"\n", pos)
+            if nl < 0:
+                break
+            line = data[pos:nl].strip()
+            pos = nl + 1
+            if not line:
+                continue
+            try:
+                ent = json.loads(line)
+                key = bytes.fromhex(ent["k"])
+                raw, writer = ent["r"], ent.get("w")
+            except (ValueError, KeyError, TypeError):
+                # torn/corrupt interior line (or stray bytes): skip, keep
+                # everything that parsed
+                self.loaded_dropped += 1
+                continue
+            if key not in self._data:
+                fresh += 1
+            self._insert(key, raw, writer)
+        tail = data[pos:]
+        if tail.strip():
+            if count_torn_tail:
+                self.loaded_dropped += 1
+                pos = len(data)
+        else:
+            pos = len(data)
+        self._offsets[path] = off + pos
+        return fresh
+
+    def refresh(self) -> int:
+        """Log shipping: fold in whatever other writers appended to the base
+        log or any segment since the last load/refresh. Returns the number of
+        fresh entries applied (also accumulated in ``shipped``). Safe against
+        a live writer: only complete newline-terminated lines are consumed."""
+        with self._lock:
+            applied = 0
+            for p in self._log_paths():
+                applied += self._consume(p, count_torn_tail=False)
+            self.shipped += applied
+            return applied
 
     def _handle(self):
         if self.read_only:
@@ -96,8 +214,8 @@ class DurableRecordStore(RecordStore):
                 f"store opened read_only ({self.path}): appends are disabled"
             )
         if self._file is None:
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            self._file = open(self.path, "a", encoding="utf-8")
+            self.write_path.parent.mkdir(parents=True, exist_ok=True)
+            self._file = open(self.write_path, "a", encoding="utf-8")
         return self._file
 
     def _append(self, key: bytes, raw: dict, writer: Optional[str]) -> None:
@@ -120,8 +238,11 @@ class DurableRecordStore(RecordStore):
             self._append(key, raw, writer)
 
     def compact(self) -> int:
-        """Atomically rewrite the log to the live entries; returns the number
-        of log lines dropped (stale duplicates + evicted keys)."""
+        """Atomically rewrite the base log to the live entries — merging and
+        retiring any worker segments — then fsync the directory so neither
+        the rename nor the segment unlinks can be undone by a crash. Returns
+        the number of log lines dropped (stale duplicates + evicted keys +
+        merged segment lines)."""
         with self._lock:
             if self.read_only:
                 raise RuntimeError(
@@ -129,13 +250,26 @@ class DurableRecordStore(RecordStore):
                     f"disabled (repro.serve snapshots compact to a separate "
                     f"artifact instead)"
                 )
+            if self.segment is not None:
+                raise RuntimeError(
+                    f"segment writer ({self.write_path.name}): compact() runs "
+                    f"on the base store, which merges and retires segments"
+                )
             if self._file is not None:
                 self._file.close()
                 self._file = None
+            # fold in anything other writers appended since the last read so
+            # the rewrite is complete, then count what the merge retires
+            for p in self._log_paths():
+                self._consume(p, count_torn_tail=True)
+            segments = self.segment_paths()
             before = 0
-            if self.path.exists():
-                with open(self.path, "r", encoding="utf-8") as f:
-                    before = sum(1 for ln in f if ln.strip())
+            for p in [self.path] + segments:
+                try:
+                    with open(p, "r", encoding="utf-8") as f:
+                        before += sum(1 for ln in f if ln.strip())
+                except FileNotFoundError:
+                    pass
             fd, tmp = tempfile.mkstemp(
                 prefix=self.path.name + ".",
                 suffix=".compact",
@@ -148,12 +282,21 @@ class DurableRecordStore(RecordStore):
                     f.flush()
                     os.fsync(f.fileno())
                 os.replace(tmp, self.path)
+                _fsync_dir(self.path.parent)
             except BaseException:
                 try:
                     os.unlink(tmp)
                 except OSError:
                     pass
                 raise
+            for seg in segments:
+                try:
+                    os.unlink(seg)
+                except FileNotFoundError:
+                    pass
+            if segments:
+                _fsync_dir(self.path.parent)
+            self._offsets = {self.path: self.path.stat().st_size}
             return before - len(self._data)
 
     def flush(self) -> None:

@@ -376,7 +376,12 @@ def load_store_frontier(
     """Read-only store log → one frontier over every valid record, each
     annotated with its decision vector and namespace digest prefix (the
     config identity). Never touches the log for appends — safe against a
-    concurrent writer (``DurableRecordStore(read_only=True)``)."""
+    concurrent writer (``DurableRecordStore(read_only=True)``).
+
+    Sharded-run output needs no special handling: per-worker log segments
+    (``<log>.worker-<k>``, see ``repro.runtime.store``) merge into the load
+    last-write-wins, and ``store_path`` may be the segment *directory*
+    itself (resolved to its ``store.jsonl`` base log)."""
     from repro.runtime import DurableRecordStore
 
     store = DurableRecordStore(store_path, read_only=True)
@@ -399,6 +404,9 @@ def load_store_frontier(
         "namespaces": sorted(namespaces),
         "dropped_lines": store.loaded_dropped,
     }
+    segments = store.segment_paths()
+    if segments:  # only when sharded, so legacy snapshot bytes are unchanged
+        info["segments"] = len(segments)
     return frontier, info
 
 
@@ -408,7 +416,10 @@ def snapshot_store(
     objectives=DEFAULT_OBJECTIVES,
 ) -> tuple[dict, dict]:
     """Compact a store's JSONL log into a frontier snapshot artifact:
-    the serve tier's build step. Returns ``(header, load info)``."""
+    the serve tier's build step. ``store_path`` may also be a sharded run's
+    store directory or base log — live worker segments are folded in
+    (last-write-wins) without being modified. Returns
+    ``(header, load info)``."""
     frontier, info = load_store_frontier(store_path, objectives)
     header = write_snapshot(
         frontier,

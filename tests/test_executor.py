@@ -1,0 +1,357 @@
+"""Sharded multi-process executor + log-shipping store segments.
+
+Covers the distributed tier end to end: single-writer segment merge
+(last-write-wins), torn-segment tolerance, live log shipping via
+``refresh()``, compaction that merges and retires segments (with the
+directory fsync the rename needs to be durable), process-mode
+serial-equivalence (bitwise per-scenario histories vs ``--workers 1``),
+kill-one-worker → resume → zero re-simulation, and cross-process budget
+enforcement."""
+import dataclasses
+import pickle
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import nas, proxy, scenarios, sweep
+from repro.core.search import SearchConfig, SearchInterrupted
+from repro.runtime import (
+    SELFKILL_ENV,
+    Budget,
+    Checkpointer,
+    DurableRecordStore,
+    SearchExecutor,
+    WorkerCrashed,
+    scenario_jobs,
+)
+from repro.runtime import store as store_mod
+
+SCENARIOS = ["lat-0.3ms", "edge-sku-nano", "energy-1mJ", "lat-0.8ms"]
+
+
+def _k(i: int) -> bytes:
+    return b"n" * 20 + np.int64(i).tobytes()
+
+
+def _rec(v: float) -> dict:
+    return {"valid": True, "accuracy": v, "latency_ms": v, "area_mm2": v}
+
+
+def _sweep_cfg(**kw) -> sweep.SweepConfig:
+    # evolution controller: no jax jit in the workers, so spawn-mode tests
+    # stay fast on one core; the equivalence guarantee is controller-agnostic
+    return sweep.SweepConfig(
+        search=SearchConfig(samples=24, batch=8, controller="evolution"),
+        **kw,
+    )
+
+
+def _runner(cfg) -> sweep.SweepRunner:
+    return sweep.SweepRunner(
+        SCENARIOS, nas.tiny_space(), proxy.SurrogateAccuracy(), cfg
+    )
+
+
+# ---------------------------------------------------------------------------
+# segment merge semantics
+# ---------------------------------------------------------------------------
+
+
+def test_segment_merge_is_union_with_last_write_wins(tmp_path):
+    path = tmp_path / "s.jsonl"
+    with DurableRecordStore(path) as base:
+        base.put(_k(0), _rec(0.0), writer="base")
+    with DurableRecordStore(path, segment=0) as w0:
+        w0.put(_k(1), _rec(1.0), writer="w0")
+        w0.put(_k(9), _rec(0.5), writer="w0")
+    with DurableRecordStore(path, segment=1) as w1:
+        w1.put(_k(2), _rec(2.0), writer="w1")
+        w1.put(_k(9), _rec(0.7), writer="w1")  # same key, later segment
+
+    merged = DurableRecordStore(path, read_only=True)
+    assert len(merged) == 4  # union of base + both segments
+    assert merged.get(_k(0))["accuracy"] == 0.0
+    assert merged.get(_k(1))["accuracy"] == 1.0
+    assert merged.get(_k(2))["accuracy"] == 2.0
+    # deterministic merge order: base first, then segments numerically —
+    # worker-1's record wins the key both workers paid for
+    assert merged.get(_k(9))["accuracy"] == 0.7
+
+
+def test_segment_writer_writes_only_its_segment(tmp_path):
+    path = tmp_path / "s.jsonl"
+    with DurableRecordStore(path, segment=3) as w:
+        w.put(_k(1), _rec(1.0))
+        assert w.write_path.name == "s.jsonl.worker-3"
+    assert not path.exists() or path.stat().st_size == 0
+    assert (tmp_path / "s.jsonl.worker-3").stat().st_size > 0
+
+
+def test_torn_segment_tail_is_dropped_not_fatal(tmp_path):
+    """A worker killed mid-append leaves a torn last line in its own segment
+    only; the merge drops that line and keeps everything else."""
+    path = tmp_path / "s.jsonl"
+    with DurableRecordStore(path, segment=0) as w0:
+        w0.put(_k(1), _rec(1.0))
+    with open(tmp_path / "s.jsonl.worker-0", "a") as f:
+        f.write('{"k": "torn')
+    with DurableRecordStore(path, segment=1) as w1:
+        w1.put(_k(2), _rec(2.0))
+
+    merged = DurableRecordStore(path, read_only=True)
+    assert len(merged) == 2
+    assert merged.loaded_dropped == 1
+
+
+def test_refresh_ships_segment_appends_and_waits_for_torn_tail(tmp_path):
+    """Log shipping: the base store folds completed segment lines in on
+    refresh(); a half-written line (a live writer mid-append) is left in
+    place and consumed by a later refresh once the newline lands."""
+    path = tmp_path / "s.jsonl"
+    base = DurableRecordStore(path)
+    writer = DurableRecordStore(path, segment=0)
+    writer.put(_k(1), _rec(1.0))
+    writer.flush()
+    assert base.get(_k(1)) is None  # not shipped yet
+    assert base.refresh() == 1
+    assert base.get(_k(1))["accuracy"] == 1.0
+
+    line = store_mod._dump_line(_k(2), _rec(2.0), None) + "\n"
+    seg = tmp_path / "s.jsonl.worker-0"
+    writer.close()
+    with open(seg, "a") as f:
+        f.write(line[:10])  # in-flight append, no newline yet
+        f.flush()
+        assert base.refresh() == 0
+        f.write(line[10:])  # newline lands
+    assert base.refresh() == 1
+    assert base.get(_k(2))["accuracy"] == 2.0
+    base.close()
+
+
+def test_compact_merges_and_retires_segments_with_dir_fsync(tmp_path, monkeypatch):
+    calls = []
+    real = store_mod._fsync_dir
+    monkeypatch.setattr(
+        store_mod, "_fsync_dir", lambda p: (calls.append(Path(p)), real(p))[1]
+    )
+    path = tmp_path / "s.jsonl"
+    with DurableRecordStore(path, segment=0) as w0:
+        w0.put(_k(1), _rec(1.0))
+        w0.put(_k(1), _rec(1.5))  # superseded line -> compaction fodder
+    with DurableRecordStore(path, segment=1) as w1:
+        w1.put(_k(2), _rec(2.0))
+
+    base = DurableRecordStore(path)
+    assert len(base) == 2
+    dropped = base.compact()
+    base.close()
+    assert dropped == 1  # 3 lines in, 2 survivors
+    # segments merged into the base log and retired
+    assert list(tmp_path.glob("s.jsonl.worker-*")) == []
+    reloaded = DurableRecordStore(path, read_only=True)
+    assert len(reloaded) == 2 and reloaded.get(_k(1))["accuracy"] == 1.5
+    # the atomic-rename fix: the parent directory is fsynced so the replace
+    # (and the segment unlinks) survive a crash right after compact()
+    assert calls.count(tmp_path) >= 2
+
+
+def test_segment_writer_refuses_compact(tmp_path):
+    with DurableRecordStore(tmp_path / "s.jsonl", segment=0) as w:
+        w.put(_k(1), _rec(1.0))
+        with pytest.raises(RuntimeError, match="base store"):
+            w.compact()
+
+
+def test_directory_path_resolves_to_store_jsonl(tmp_path):
+    d = tmp_path / "run"
+    d.mkdir()
+    with DurableRecordStore(d) as store:
+        store.put(_k(1), _rec(1.0))
+        assert store.path == d / "store.jsonl"
+    assert len(DurableRecordStore(d, read_only=True)) == 1
+
+
+# ---------------------------------------------------------------------------
+# process mode: serial equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_process_sweep_bitwise_equals_serial(tmp_path):
+    """The core guarantee: sharding scenarios across worker processes
+    changes wall-clock, not results — per-scenario histories, best records
+    and the global frontier are bitwise-identical to a serial run."""
+    serial = _runner(_sweep_cfg()).run()
+
+    cfg = _sweep_cfg(workers=2, processes=True)
+    cfg.search = dataclasses.replace(
+        cfg.search, store=DurableRecordStore(tmp_path / "s.jsonl")
+    )
+    dist = _runner(cfg).run()
+
+    assert [o.scenario.name for o in dist.outcomes] == [
+        o.scenario.name for o in serial.outcomes
+    ]
+    for so, do in zip(serial.outcomes, dist.outcomes):
+        assert do.result.history == so.result.history  # bitwise
+        assert do.result.best_record == so.result.best_record
+        assert do.best == so.best
+    assert dist.frontier.records() == serial.frontier.records()
+    assert dist.store_stats["workers"] == 2
+
+
+def test_process_threads_and_serial_store_agree(tmp_path):
+    """Same sweep through threads vs processes: identical tables."""
+    cfg_t = _sweep_cfg(workers=2)
+    threads = _runner(cfg_t).run()
+    cfg_p = _sweep_cfg(workers=2, processes=True)
+    cfg_p.search = dataclasses.replace(
+        cfg_p.search, store=DurableRecordStore(tmp_path / "s.jsonl")
+    )
+    procs = _runner(cfg_p).run()
+    assert procs.table().splitlines()[:-1] == threads.table().splitlines()[:-1]
+
+
+def test_process_mode_requires_durable_or_no_store():
+    from repro.core.engine import RecordStore
+
+    ex = SearchExecutor(store=RecordStore(), processes=True)
+    jobs = scenario_jobs(
+        ["lat-0.3ms"], nas.tiny_space(), proxy.SurrogateAccuracy(),
+        SearchConfig(samples=8, batch=8, controller="evolution"),
+    )
+    with pytest.raises(ValueError, match="DurableRecordStore"):
+        ex.run(jobs)
+
+
+def test_round_robin_shard_is_deterministic():
+    jobs = list(range(7))
+    shards = SearchExecutor._shard(jobs, 3)
+    assert shards == [[0, 3, 6], [1, 4], [2, 5]]
+
+
+def test_unpicklable_job_raises_actionable_error(tmp_path):
+    from repro.core.space import Choice, Space
+
+    # a hand-built space with a lambda decoder and no provenance
+    space = Space([Choice("a", (0, 1))], decoder=lambda d: d, name="adhoc")
+    ex = SearchExecutor(
+        store=DurableRecordStore(tmp_path / "s.jsonl"),
+        processes=True,
+    )
+    jobs = scenario_jobs(
+        ["lat-0.3ms"], space, proxy.SurrogateAccuracy(),
+        SearchConfig(samples=8, batch=8, controller="evolution"),
+    )
+    with pytest.raises(ValueError, match="provenance"):
+        ex.run(jobs)
+
+
+# ---------------------------------------------------------------------------
+# process mode: crash recovery and budgets
+# ---------------------------------------------------------------------------
+
+
+def _executor(tmp_path, workers=2, budget=None):
+    return SearchExecutor(
+        store=DurableRecordStore(tmp_path / "s.jsonl"),
+        checkpoint=Checkpointer(tmp_path / "ck"),
+        max_workers=workers,
+        budget=budget,
+        processes=True,
+    )
+
+
+def _jobs():
+    return scenario_jobs(
+        SCENARIOS,
+        nas.tiny_space(),
+        proxy.SurrogateAccuracy(),
+        SearchConfig(samples=24, batch=8, controller="evolution"),
+    )
+
+
+def test_kill_one_worker_then_resume_then_zero_resim(tmp_path, monkeypatch):
+    """Worker 1 is killed mid-shard (os._exit, no cleanup). Its finished
+    work survives in its segment + checkpoints; a resume run completes only
+    the remainder; a third run re-simulates nothing at all."""
+    monkeypatch.setenv(SELFKILL_ENV, "1:2")  # worker 1 dies after 2 admits
+    report = _executor(tmp_path).run(_jobs())
+    crashed = [
+        n for n, o in report.outcomes.items()
+        if o.status == "interrupted" and isinstance(o.error, WorkerCrashed)
+    ]
+    assert crashed, "self-kill hook did not fire"
+    done_first = set(report.done)
+
+    monkeypatch.delenv(SELFKILL_ENV)
+    resume = _executor(tmp_path).run(_jobs())
+    assert sorted(resume.done) == sorted(f"sweep.{s}" for s in SCENARIOS)
+    # scenarios the dead worker finished pre-crash replay from checkpoints
+    assert done_first <= set(resume.done)
+
+    third = _executor(tmp_path).run(_jobs())
+    assert sorted(third.done) == sorted(resume.done)
+    assert third.store_stats["puts"] == 0  # zero re-simulation
+    assert third.store_stats["appended"] == 0
+    for name in third.done:
+        assert (
+            third.outcomes[name].result.history
+            == resume.outcomes[name].result.history
+        )
+
+
+def test_shared_budget_interrupts_across_processes(tmp_path):
+    budget = Budget(max_samples=16)  # < 4 scenarios x 24 samples
+    report = _executor(tmp_path, budget=budget).run(_jobs())
+    assert report.interrupted
+    for name in report.interrupted:
+        assert isinstance(
+            report.outcomes[name].error, (SearchInterrupted, WorkerCrashed)
+        )
+    # worker admissions synced back into the parent's budget
+    assert budget.granted >= 16 and budget.exhausted
+
+    # the budgeted run checkpointed; an unbudgeted resume finishes the sweep
+    done = _executor(tmp_path).run(_jobs())
+    assert sorted(done.done) == sorted(f"sweep.{s}" for s in SCENARIOS)
+
+
+def test_sweep_runner_process_interrupt_raises_search_interrupted(tmp_path):
+    from repro.core.search import SearchInterrupted as SI
+    from repro.runtime import SearchRuntime
+
+    cfg = _sweep_cfg(workers=2, processes=True)
+    runtime = SearchRuntime(
+        store=DurableRecordStore(tmp_path / "s.jsonl"),
+        checkpoint=Checkpointer(tmp_path / "ck"),
+        budget=Budget(max_samples=16),
+    )
+    with pytest.raises(SI):
+        _runner(cfg).run(runtime=runtime)
+
+
+# ---------------------------------------------------------------------------
+# provenance pickling (what makes job shipping work)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("factory", sorted(nas.SPACES))
+def test_registry_spaces_pickle_to_equivalent_spaces(factory):
+    space = nas.SPACES[factory]()
+    clone = pickle.loads(pickle.dumps(space))
+    assert clone.name == space.name
+    assert [c.name for c in clone.choices] == [c.name for c in space.choices]
+    rng = np.random.default_rng(7)
+    vec = space.sample(rng)
+    assert clone.decode(vec) == space.decode(vec)
+
+
+def test_has_space_pickles(tmp_path):
+    from repro.core import has as has_lib
+
+    space = has_lib.has_space()
+    clone = pickle.loads(pickle.dumps(space))
+    vec = space.sample(np.random.default_rng(0))
+    assert clone.decode(vec) == space.decode(vec)

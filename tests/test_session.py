@@ -1,0 +1,145 @@
+"""SearchSession: the unified driver entrypoint.
+
+The legacy module-level drivers are thin wrappers over a per-call session,
+so session methods must be bitwise-equal to the old signatures; the
+resolution rules (engine/backend exclusivity, predictor deprecation,
+checkpoint_dir shorthand) now live in one place and are tested here."""
+import warnings
+
+import pytest
+
+from repro.core import nas, proxy, scenarios, search
+from repro.core.search import SearchConfig
+from repro.core.session import SearchSession
+
+SC = scenarios.get("lat-0.3ms")
+CFG = SearchConfig(samples=24, batch=8, controller="reinforce")
+
+
+def _space():
+    return nas.tiny_space()
+
+
+def _acc():
+    return proxy.SurrogateAccuracy()
+
+
+def _same(a, b):
+    assert a.history == b.history  # bitwise: same trajectories
+    assert a.best_record == b.best_record
+    assert (
+        a.best_vec is None and b.best_vec is None
+        or (a.best_vec == b.best_vec).all()
+    )
+
+
+# ---------------------------------------------------------------------------
+# parity with the legacy drivers
+# ---------------------------------------------------------------------------
+
+
+def test_session_joint_matches_joint_search():
+    legacy = search.joint_search(_space(), _acc(), cfg=CFG, scenario=SC)
+    via = SearchSession(_space(), _acc(), cfg=CFG).joint(scenario=SC)
+    _same(legacy, via)
+
+
+def test_session_fixed_hw_matches_fixed_hw_search():
+    legacy = search.fixed_hw_search(_space(), _acc(), cfg=CFG, scenario=SC)
+    via = SearchSession(_space(), _acc(), cfg=CFG).fixed_hw(scenario=SC)
+    _same(legacy, via)
+
+
+def test_session_phase_matches_phase_search():
+    legacy = search.phase_search(_space(), _acc(), cfg=CFG, scenario=SC)
+    via = SearchSession(_space(), _acc(), cfg=CFG).phase(scenario=SC)
+    _same(legacy, via)
+
+
+def test_session_nested_matches_nested_search():
+    legacy = search.nested_search(_space(), _acc(), cfg=CFG, scenario=SC, outer=2)
+    via = SearchSession(_space(), _acc(), cfg=CFG).nested(scenario=SC, outer=2)
+    _same(legacy, via)
+
+
+def test_search_dispatches_by_driver_name():
+    ses = SearchSession(_space(), _acc(), cfg=CFG)
+    res = ses.search("fixed_hw", scenario=SC)
+    _same(res, search.fixed_hw_search(_space(), _acc(), cfg=CFG, scenario=SC))
+    with pytest.raises(ValueError, match="unknown driver"):
+        ses.search("gradient")
+
+
+def test_one_session_runs_many_searches():
+    """The sweep pattern: one session, one resolution, N scenario calls."""
+    ses = SearchSession(_space(), _acc(), cfg=CFG)
+    a = ses.joint(scenario=SC, tag="a")
+    b = ses.joint(scenario=scenarios.get("edge-sku-nano"), tag="b")
+    assert a.history and b.history
+    assert a.best_record != b.best_record  # objectives pulled them apart
+
+
+# ---------------------------------------------------------------------------
+# resolution rules
+# ---------------------------------------------------------------------------
+
+
+class _Pred:
+    def predict(self, feats):
+        return 0.1 + 0.01 * feats.sum(axis=1), 50.0 + feats[:, 0]
+
+
+def test_predictor_kwarg_warns_deprecation():
+    with pytest.warns(DeprecationWarning, match="predictor= is deprecated"):
+        SearchSession(_space(), _acc(), cfg=CFG, predictor=_Pred())
+    with pytest.warns(DeprecationWarning):
+        search.joint_search(_space(), _acc(), cfg=CFG, scenario=SC, predictor=_Pred())
+
+
+def test_engine_excludes_backend_and_predictor():
+    from repro.core.engine import EvaluationEngine
+    from repro.core.has import has_space
+    from repro.hw import CascadeBackend
+
+    eng = EvaluationEngine(_space(), has_space(), _acc(), SC.reward_config())
+    with pytest.raises(ValueError, match="not both"):
+        SearchSession(_space(), _acc(), engine=eng, backend=CascadeBackend())
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="not both"):
+            SearchSession(_space(), _acc(), engine=eng, predictor=object())
+
+
+def test_prebuilt_engine_refused_by_multi_engine_drivers():
+    from repro.core.engine import EvaluationEngine
+    from repro.core.has import has_space
+
+    eng = EvaluationEngine(_space(), has_space(), _acc(), SC.reward_config())
+    ses = SearchSession(_space(), _acc(), cfg=CFG, engine=eng)
+    with pytest.raises(ValueError, match="phase"):
+        ses.phase(scenario=SC)
+    with pytest.raises(ValueError, match="nested"):
+        ses.nested(scenario=SC)
+
+
+def test_checkpoint_dir_shorthand_resumes(tmp_path):
+    """checkpoint_dir= on the session behaves like the legacy kwarg: an
+    identical rerun replays from checkpoints without re-searching."""
+    ses = SearchSession(_space(), _acc(), cfg=CFG, checkpoint_dir=str(tmp_path))
+    first = ses.joint(scenario=SC)
+    again = SearchSession(
+        _space(), _acc(), cfg=CFG, checkpoint_dir=str(tmp_path)
+    ).joint(scenario=SC)
+    _same(first, again)
+    assert again.engine_stats["evaluated"] == 0  # pure replay
+
+
+def test_session_has_space_flows_into_joint():
+    from repro.core.has import has_space
+
+    hs = has_space()
+    ses = SearchSession(_space(), _acc(), cfg=CFG, has_space=hs)
+    res = ses.joint(scenario=SC)
+    # joint vec covers both sub-spaces
+    n = _space().num_decisions + hs.num_decisions
+    assert len(res.best_vec) == n
