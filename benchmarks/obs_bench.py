@@ -1,0 +1,144 @@
+"""Telemetry overhead: the numbers behind "off by default, near-zero cost".
+
+Three measurements, matching the obs-subsystem acceptance bar:
+
+1. **disabled span** — ns/op for ``with obs_trace.span(...)`` with no
+   tracer active (one module-global read + a shared no-op context
+   manager). This is the permanent cost every hot path pays for carrying
+   instrumentation; the budget is nanoseconds.
+2. **enabled recording** — events/s a live tracer sustains writing
+   buffered JSONL spans (the worst case for a worker whose every batch is
+   wrapped).
+3. **enabled sweep overhead** — the same in-process quick sweep run
+   untraced and traced in interleaved pairs. The reported overhead is the
+   deterministic bound ``spans emitted x per-event record cost / untraced
+   sweep time`` (the extra work a traced sweep does is exactly its
+   events), which stays meaningful on shared hardware where direct
+   traced-vs-untraced wall-clock deltas are dominated by +/-5% machine
+   jitter; the median adjacent-pair wall-clock ratio is reported alongside
+   as a sanity check. The acceptance bar is <3%; the traced sweeps must
+   also produce bitwise-identical search trajectories (tracing is
+   observational only).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import nas, proxy, sweep
+from repro.core.search import SearchConfig
+from repro.obs import trace as obs_trace
+
+SCENARIOS = ["lat-0.3ms", "edge-sku-nano", "energy-1mJ", "lat-0.8ms"]
+
+
+def _disabled_span_ns(n: int) -> float:
+    assert obs_trace.active() is None
+    t0 = time.perf_counter_ns()
+    for _ in range(n):
+        with obs_trace.span("x"):
+            pass
+    return (time.perf_counter_ns() - t0) / n
+
+
+def _trace_events_per_s(n: int) -> float:
+    with tempfile.TemporaryDirectory() as tmp:
+        tr = obs_trace.start(Path(tmp) / "bench")
+        t0 = time.perf_counter()
+        for i in range(n):
+            with obs_trace.span("ev", i=i):
+                pass
+        tr.flush()
+        dt = time.perf_counter() - t0
+        obs_trace.stop()
+    return n / max(dt, 1e-9)
+
+
+def _sweep_once(samples: int, batch: int, trace_dir=None):
+    tr = None
+    if trace_dir is not None:
+        tr = obs_trace.start(trace_dir)
+    try:
+        cfg = sweep.SweepConfig(
+            search=SearchConfig(samples=samples, batch=batch, controller="evolution")
+        )
+        runner = sweep.SweepRunner(
+            SCENARIOS, nas.tiny_space(), proxy.SurrogateAccuracy(), cfg
+        )
+        t0 = time.perf_counter()
+        result = runner.run()
+        dt = time.perf_counter() - t0
+        return dt, result, (tr.events if tr is not None else 0)
+    finally:
+        if trace_dir is not None:
+            obs_trace.stop()
+
+
+def run(fast: bool = True) -> dict:
+    span_iters = 200_000 if fast else 1_000_000
+    event_iters = 20_000 if fast else 100_000
+    samples, batch = (96, 8) if fast else (256, 16)
+
+    disabled_ns = _disabled_span_ns(span_iters)
+    events_per_s = _trace_events_per_s(event_iters)
+
+    reps = 7 if fast else 15
+    t_off, t_on = [], []
+    res_off = res_on = None
+    sweep_events = 0
+    with tempfile.TemporaryDirectory() as tmp:
+        _sweep_once(samples, batch)  # warmup: jit/import costs out of band
+        _sweep_once(samples, batch, trace_dir=Path(tmp) / "warm")
+        for i in range(reps):
+            t, res_off, _ = _sweep_once(samples, batch)
+            t_off.append(t)
+            t, res_on, sweep_events = _sweep_once(
+                samples, batch, trace_dir=Path(tmp) / f"tr{i}"
+            )
+            t_on.append(t)
+
+    identical = all(
+        a.result.history == b.result.history
+        for a, b in zip(res_off.outcomes, res_on.outcomes)
+    )
+    # deterministic bound: a traced sweep does exactly `sweep_events` more
+    # units of work than an untraced one, each costing 1/events_per_s (the
+    # measured steady-state record cost). events x cost / sweep time bounds
+    # the overhead without the +/-5% wall-clock jitter a shared box adds to
+    # direct traced-vs-untraced timing.
+    span_cost_pct = (sweep_events / events_per_s) / min(t_off) * 100.0
+    # wall-clock sanity figure: median of adjacent-pair ratios (pairing
+    # cancels slow drift; still noise-dominated when the true overhead is
+    # far below the box's run-to-run variance)
+    ratios = sorted(on / off for off, on in zip(t_off, t_on))
+    mid = len(ratios) // 2
+    measured_pct = (
+        (ratios[mid] if len(ratios) % 2 else (ratios[mid - 1] + ratios[mid]) / 2) - 1.0
+    ) * 100.0
+
+    return {
+        "disabled_span_ns": disabled_ns,
+        "trace_events_per_s": events_per_s,
+        "sweep_untraced_s": min(t_off),
+        "sweep_traced_s": min(t_on),
+        "sweep_trace_events": sweep_events,
+        "enabled_overhead_pct": span_cost_pct,
+        "measured_overhead_pct": measured_pct,
+        "under_3pct": bool(span_cost_pct < 3.0),
+        "results_identical": bool(identical),
+        "n_evals": span_iters,
+        "derived": (
+            f"disabled span {disabled_ns:.0f}ns/op, "
+            f"{events_per_s:,.0f} events/s enabled, "
+            f"sweep overhead {span_cost_pct:.2f}% bound "
+            f"({sweep_events} spans; measured {measured_pct:+.1f}%), "
+            f"identical results: {identical}"
+        ),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    print(out["derived"])

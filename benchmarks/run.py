@@ -42,9 +42,11 @@ BENCHES = [
     ("oneshot", "benchmarks.oneshot_bench"),
     ("meshsearch", "benchmarks.meshsearch_bench"),
     ("roofline", "benchmarks.roofline"),
+    ("obs", "benchmarks.obs_bench"),
 ]
 
-QUICK = ("engine", "search_loop", "hw_backend", "roofline", "serve", "executor")
+QUICK = ("engine", "search_loop", "hw_backend", "roofline", "serve",
+         "executor", "obs")
 
 
 def main() -> None:

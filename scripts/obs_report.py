@@ -1,0 +1,58 @@
+"""Run-report CLI: merge a traced run's segments and summarize it.
+
+Point it at the directory a traced run wrote (``--trace DIR`` on
+``scripts/sweep.py`` / ``scripts/runtime_serve.py``). It merges the
+per-worker ``trace.jsonl.worker-<k>`` segments into one Chrome-trace
+``trace.json`` (open it in https://ui.perfetto.dev or
+``chrome://tracing``), validates the merged file against the trace event
+schema, and prints the run report: top spans by cumulative wall time,
+worker utilization, per-scenario evaluation counts, and the store's
+per-namespace cache hit rates from ``metrics.json``.
+
+  PYTHONPATH=src python scripts/sweep.py --quick --trace /tmp/run
+  PYTHONPATH=src python scripts/obs_report.py /tmp/run
+  PYTHONPATH=src python scripts/obs_report.py /tmp/run --json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.obs import report, trace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="telemetry run report")
+    ap.add_argument("trace_dir", help="directory holding trace.jsonl[.worker-*]")
+    ap.add_argument(
+        "--top", type=int, default=12, help="span rows to show (default 12)"
+    )
+    ap.add_argument(
+        "--json", action="store_true", help="emit the report as JSON instead"
+    )
+    args = ap.parse_args()
+
+    if not trace.trace_paths(args.trace_dir):
+        print(
+            f"no {trace.TRACE_BASENAME}* files under {args.trace_dir}", file=sys.stderr
+        )
+        raise SystemExit(2)
+    rep = report.build_report(args.trace_dir, top=args.top)
+    if args.json:
+        json.dump(rep, sys.stdout, indent=1, default=str)
+        print()
+    else:
+        print(report.render_report(rep))
+        print(
+            f"\nmerged trace: {rep['trace']} "
+            f"(load in https://ui.perfetto.dev or chrome://tracing)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -168,6 +168,10 @@ def main() -> None:
     if args.compact_to and args.store is None:
         ap.error("--compact-to needs --store")
 
+    # start tracing (--trace DIR) before any store/server construction so
+    # fold/query spans and store accounting cover the whole session
+    tracer = runtime_cli.start_trace(args)
+
     if args.compact_to:
         header, info = snapshot_store(args.store, args.compact_to)
         print(
@@ -265,6 +269,9 @@ def main() -> None:
         f"indexed={s.index_answers} scanned={s.scan_answers} "
         f"evaluations={s.evaluations} ({suffix})",
         file=sys.stderr,
+    )
+    runtime_cli.finish_trace(
+        args, tracer, extra={"serve_stats": s.as_dict()}, file=sys.stderr
     )
 
 

@@ -208,6 +208,10 @@ def main() -> None:
     space_name = "tiny" if args.quick else args.space
     samples = min(args.samples, 96) if args.quick else args.samples
     space = nas.SPACES[space_name]()
+    # tracing starts before the runtime so the store (and every engine) is
+    # built under the active tracer; process workers inherit enablement via
+    # the executor's env handoff
+    tracer = runtime_cli.start_trace(args)
     runtime = runtime_cli.build_runtime(args)
     cfg = sweep.SweepConfig(
         driver=args.driver,
@@ -279,6 +283,20 @@ def main() -> None:
 
                 header, _info = snapshot_store(args.store, args.snapshot)
                 print(f"snapshot: frontier {header['count']} -> {args.snapshot}")
+
+    if tracer is not None:
+        extra: dict = {}
+        if result is not None:
+            extra["scenarios"] = {
+                o.scenario.name: o.result.engine_stats for o in result.outcomes
+            }
+            if result.store_stats is not None:
+                extra["store_stats"] = result.store_stats
+        if runtime is not None and runtime.store is not None:
+            ns = runtime.store.namespace_stats()
+            if ns:
+                extra["namespaces"] = ns
+        runtime_cli.finish_trace(args, tracer, extra=extra)
 
     if interrupted:
         if runtime is not None and runtime.checkpoint is not None:

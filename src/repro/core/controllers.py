@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.space import Space
+from repro.obs import trace as obs_trace
 
 #: trajectory contract version of the vectorized factorized-categorical
 #: sampler/update (see module docstring)
@@ -105,6 +106,10 @@ class _CategoricalPolicy:
         """Draw ``n`` decision vectors with ONE generator call: inverse-CDF
         over the per-decision categorical distributions. The (D, C_max) CDF
         is recomputed only when the logits changed."""
+        with obs_trace.span("controller_sample", n=n, ctrl=type(self).__name__):
+            return self._sample(n)
+
+    def _sample(self, n: int) -> np.ndarray:
         if self._cdf is None:
             lg = np.where(self._mask, np.asarray(self.logits, np.float64), -np.inf)
             lg -= lg.max(axis=1, keepdims=True)
@@ -199,23 +204,24 @@ class PPOController(_CategoricalPolicy):
         return self._update_jit
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
-        rewards = np.asarray(rewards, np.float32)
-        if not self._b_init:
-            self.baseline = float(rewards.mean())
-            self._b_init = True
-        adv = rewards - self.baseline
-        if adv.std() > 1e-8:
-            adv = adv / (adv.std() + 1e-8)
-        self.baseline = 0.9 * self.baseline + 0.1 * float(rewards.mean())
-        lg, self.opt_m, self.opt_v, self.opt_t = self._update_fn()(
-            self.logits,
-            self.opt_m,
-            self.opt_v,
-            jnp.asarray(self.opt_t, jnp.int32),
-            jnp.asarray(vecs),
-            jnp.asarray(adv),
-        )
-        self._set_logits(lg)
+        with obs_trace.span("controller_update", n=len(vecs), ctrl=type(self).__name__):
+            rewards = np.asarray(rewards, np.float32)
+            if not self._b_init:
+                self.baseline = float(rewards.mean())
+                self._b_init = True
+            adv = rewards - self.baseline
+            if adv.std() > 1e-8:
+                adv = adv / (adv.std() + 1e-8)
+            self.baseline = 0.9 * self.baseline + 0.1 * float(rewards.mean())
+            lg, self.opt_m, self.opt_v, self.opt_t = self._update_fn()(
+                self.logits,
+                self.opt_m,
+                self.opt_v,
+                jnp.asarray(self.opt_t, jnp.int32),
+                jnp.asarray(vecs),
+                jnp.asarray(adv),
+            )
+            self._set_logits(lg)
 
     def state(self) -> dict:
         return {
@@ -282,21 +288,22 @@ class ReinforceController(_CategoricalPolicy):
         return self._update_jit
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
-        rewards = np.asarray(rewards, np.float32)
-        if self.baseline is None:
-            self.baseline = float(rewards.mean())
-        adv = rewards - self.baseline
-        m = self.cfg.baseline_momentum
-        self.baseline = m * self.baseline + (1 - m) * float(rewards.mean())
-        lg, self.opt_m, self.opt_v, self.opt_t = self._update_fn()(
-            self.logits,
-            self.opt_m,
-            self.opt_v,
-            jnp.asarray(self.opt_t, jnp.int32),
-            jnp.asarray(vecs),
-            jnp.asarray(adv),
-        )
-        self._set_logits(lg)
+        with obs_trace.span("controller_update", n=len(vecs), ctrl=type(self).__name__):
+            rewards = np.asarray(rewards, np.float32)
+            if self.baseline is None:
+                self.baseline = float(rewards.mean())
+            adv = rewards - self.baseline
+            m = self.cfg.baseline_momentum
+            self.baseline = m * self.baseline + (1 - m) * float(rewards.mean())
+            lg, self.opt_m, self.opt_v, self.opt_t = self._update_fn()(
+                self.logits,
+                self.opt_m,
+                self.opt_v,
+                jnp.asarray(self.opt_t, jnp.int32),
+                jnp.asarray(vecs),
+                jnp.asarray(adv),
+            )
+            self._set_logits(lg)
 
     def sample(self, n: int = 1) -> np.ndarray:
         return super().sample(n)
@@ -344,23 +351,31 @@ class EvolutionController:
         self.population: list[tuple[np.ndarray, float]] = []
 
     def sample(self, n: int = 1) -> np.ndarray:
-        out = []
-        for _ in range(n):
-            if len(self.population) < self.cfg.population:
-                out.append(self.space.sample(self.rng))
-            else:
-                idx = self.rng.choice(
-                    len(self.population), size=self.cfg.tournament, replace=False
-                )
-                parent = max((self.population[i] for i in idx), key=lambda t: t[1])[0]
-                out.append(self.space.mutate(parent, self.rng, self.cfg.mutate_rate))
-        return np.stack(out)
+        with obs_trace.span("controller_sample", n=n, ctrl="EvolutionController"):
+            out = []
+            for _ in range(n):
+                if len(self.population) < self.cfg.population:
+                    out.append(self.space.sample(self.rng))
+                else:
+                    idx = self.rng.choice(
+                        len(self.population), size=self.cfg.tournament,
+                        replace=False,
+                    )
+                    parent = max(
+                        (self.population[i] for i in idx), key=lambda t: t[1]
+                    )[0]
+                    out.append(
+                        self.space.mutate(parent, self.rng, self.cfg.mutate_rate)
+                    )
+            return np.stack(out)
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
-        for v, r in zip(vecs, rewards):
-            self.population.append((np.asarray(v), float(r)))
-            if len(self.population) > self.cfg.population:
-                self.population.pop(0)  # age-regularized: drop oldest
+        with obs_trace.span("controller_update", n=len(vecs),
+                            ctrl="EvolutionController"):
+            for v, r in zip(vecs, rewards):
+                self.population.append((np.asarray(v), float(r)))
+                if len(self.population) > self.cfg.population:
+                    self.population.pop(0)  # age-regularized: drop oldest
 
     def best(self) -> np.ndarray:
         return max(self.population, key=lambda t: t[1])[0]

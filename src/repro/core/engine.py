@@ -66,6 +66,8 @@ import numpy as np
 
 from repro.core import simulator
 from repro.core.proxy import CachedAccuracy
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.hw.analytic import ANALYTIC, AnalyticBackend
 from repro.hw.learned import LearnedBackend
 from repro.core.reward import (
@@ -86,9 +88,12 @@ class EngineStats:
     invalid: int = 0      # evaluated candidates the simulator rejected
     batches: int = 0      # evaluate_batch calls
 
+    def __post_init__(self):
+        obs_metrics.REGISTRY.register("engine", self)
+
     @property
     def hit_rate(self) -> float:
-        return self.cache_hits / max(self.requested, 1)
+        return obs_metrics.rate(self.cache_hits, self.requested)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -150,13 +155,16 @@ class StoreStats:
     puts: int = 0
     evictions: int = 0   # FIFO evictions at the max_entries cap
 
+    def __post_init__(self):
+        obs_metrics.REGISTRY.register("store", self)
+
     @property
     def hit_rate(self) -> float:
-        return self.hits / max(self.gets, 1)
+        return obs_metrics.rate(self.hits, self.gets)
 
     @property
     def cross_hit_rate(self) -> float:
-        return self.cross_hits / max(self.gets, 1)
+        return obs_metrics.rate(self.cross_hits, self.gets)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -188,6 +196,12 @@ class RecordStore:
         self.stats = StoreStats()
         self._pins: list = []
         self._lock = threading.RLock()
+        # per-namespace gets/hits, only when the run is being traced (one
+        # `is not None` check per get/put otherwise — observability must
+        # cost ~nothing when off). Keys are namespace digest prefixes.
+        self._ns_stats: Optional[dict[bytes, list[int]]] = (
+            {} if obs_trace.active() is not None else None
+        )
 
     def pin(self, *objs) -> None:
         """Keep strong references to the objects whose identity an engine's
@@ -200,6 +214,10 @@ class RecordStore:
         with self._lock:
             self.stats.gets += 1
             ent = self._data.get(key)
+            if self._ns_stats is not None:
+                ns = self._ns_stats.setdefault(key[:NAMESPACE_BYTES], [0, 0])
+                ns[0] += 1
+                ns[1] += ent is not None
             if ent is None:
                 return None
             raw, writer = ent
@@ -225,6 +243,22 @@ class RecordStore:
         """Snapshot of (key, raw record, writer label) triples."""
         with self._lock:
             return [(k, dict(raw), w) for k, (raw, w) in self._data.items()]
+
+    def namespace_stats(self) -> dict[str, dict]:
+        """Per-namespace ``{gets, hits, hit_rate}`` (hex digest keys) —
+        populated only when the store was built under an active tracer;
+        empty otherwise."""
+        with self._lock:
+            if not self._ns_stats:
+                return {}
+            return {
+                ns.hex(): {
+                    "gets": g,
+                    "hits": h,
+                    "hit_rate": obs_metrics.rate(h, g),
+                }
+                for ns, (g, h) in self._ns_stats.items()
+            }
 
     def __len__(self) -> int:
         return len(self._data)
@@ -418,7 +452,16 @@ class EvaluationEngine:
                     pending[k] = i
                     missing.append(i)
         if missing:
+            # manual guard (not span()): this wraps the dominant cost of a
+            # search step, and the tracer records the batch size per scenario
+            tr = obs_trace.active()
+            t0 = tr.now() if tr is not None else 0.0
             fresh = self._evaluate_candidates([vecs[i] for i in missing])
+            if tr is not None:
+                tr.complete(
+                    "simulate_batch", t0,
+                    {"n": len(missing), "label": self.label},
+                )
             for i, raw in zip(missing, fresh):
                 if keys is not None:
                     self._insert(keys[i], raw)

@@ -62,6 +62,7 @@ from repro.core.pareto import DEFAULT_OBJECTIVES, ParetoFrontier
 from repro.core.reward import RewardConfig
 from repro.core.scenarios import Scenario
 from repro.core.space import Space
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -213,42 +214,54 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
         })
 
     batches = 0
-    while n < cfg.samples:
-        batch = min(cfg.batch, cfg.samples - n)
-        if runtime is not None and not runtime.admit(batch):
-            if ck is not None:
+    # one span per driven search; try/finally so an interrupted (budget) or
+    # crashed search still records the interval it actually ran
+    tr = obs_trace.active()
+    t_span = tr.now() if tr is not None else 0.0
+    try:
+        while n < cfg.samples:
+            batch = min(cfg.batch, cfg.samples - n)
+            if runtime is not None and not runtime.admit(batch):
+                if ck is not None:
+                    save()
+                raise SearchInterrupted(tag, n, cfg.samples)
+            vecs = ctrl.sample(batch)
+            recs = engine.evaluate_batch(vecs)
+            rewards = []
+            for v, rec in zip(vecs, recs):
+                rec["sample_idx"] = n
+                # frontier-ready annotations: enough identity to reconstruct
+                # the full (α, h) config from any record — the sampled
+                # decision vector plus its space name (HAS- and NAS-space
+                # index tuples would otherwise alias in one frontier), the
+                # frozen accelerator for nas-mode engines, and the scenario
+                # that paid for the evaluation
+                rec["vec"] = tuple(int(x) for x in v)
+                rec["space"] = space.name
+                if engine.mode == "nas":
+                    rec["fixed_h"] = dataclasses.astuple(engine.fixed_h)
+                elif engine.mode == "has":
+                    rec["fixed_spec_id"] = engine.fixed_spec_id
+                if scenario is not None:
+                    rec["scenario"] = scenario.name
+                history.append(rec)
+                rewards.append(rec["reward"])
+                if rec["valid"] and rec.get("meets_constraints") and (
+                    best is None or rec["reward"] > best["reward"]
+                ):
+                    best, best_vec = rec, np.asarray(v)
+                n += 1
+            ctrl.update(vecs, np.array(rewards))
+            batches += 1
+            if ck is not None and batches % every == 0:
                 save()
-            raise SearchInterrupted(tag, n, cfg.samples)
-        vecs = ctrl.sample(batch)
-        recs = engine.evaluate_batch(vecs)
-        rewards = []
-        for v, rec in zip(vecs, recs):
-            rec["sample_idx"] = n
-            # frontier-ready annotations: enough identity to reconstruct the
-            # full (α, h) config from any record — the sampled decision
-            # vector plus its space name (HAS- and NAS-space index tuples
-            # would otherwise alias in one frontier), the frozen accelerator
-            # for nas-mode engines, and the scenario that paid for the
-            # evaluation
-            rec["vec"] = tuple(int(x) for x in v)
-            rec["space"] = space.name
-            if engine.mode == "nas":
-                rec["fixed_h"] = dataclasses.astuple(engine.fixed_h)
-            elif engine.mode == "has":
-                rec["fixed_spec_id"] = engine.fixed_spec_id
-            if scenario is not None:
-                rec["scenario"] = scenario.name
-            history.append(rec)
-            rewards.append(rec["reward"])
-            if rec["valid"] and rec.get("meets_constraints") and (
-                best is None or rec["reward"] > best["reward"]
-            ):
-                best, best_vec = rec, np.asarray(v)
-            n += 1
-        ctrl.update(vecs, np.array(rewards))
-        batches += 1
-        if ck is not None and batches % every == 0:
-            save()
+    finally:
+        if tr is not None:
+            tr.complete(
+                "search", t_span,
+                {"tag": tag, "samples": n,
+                 "scenario": None if scenario is None else scenario.name},
+            )
     if ck is not None and not replay:
         save()  # final state: doubles as the completed-search result cache
     # fall back to best-by-reward if nothing met the constraints

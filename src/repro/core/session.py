@@ -47,6 +47,7 @@ from repro.core.reward import RewardConfig
 from repro.core.scenarios import Scenario
 from repro.core.search import SearchConfig, SearchResult
 from repro.core.space import Space, concat
+from repro.obs import metrics as obs_metrics
 
 
 class SearchSession:
@@ -277,7 +278,7 @@ class SearchSession:
         import time as _time
 
         t0 = _time.monotonic()
-        stats: dict = {}
+        inner_stats: list[dict] = []
         for o in range(outer):
             hv = hspace.sample(rng)
             h = hspace.decode(hv)
@@ -289,14 +290,15 @@ class SearchSession:
                 tag=f"{tag}.outer{o}",
             )
             history.extend(res.history)
-            for key, v in res.engine_stats.items():  # aggregate over inners
-                if key != "hit_rate":
-                    stats[key] = stats.get(key, 0) + v
+            inner_stats.append(res.engine_stats)
             if res.best_record is not None and (
                 best is None or res.best_record["reward"] > best["reward"]
             ):
                 best, best_vec = res.best_record, res.best_vec
-        stats["hit_rate"] = stats["cache_hits"] / max(stats["requested"], 1)
+        # fold the per-inner engine stats through the one shared merge:
+        # counters sum, every *_rate is recomputed from the summed counters
+        # (never summed/averaged), and non-numeric keys survive
+        stats = obs_metrics.merge_stats(inner_stats)
         return SearchResult(
             best_vec, best, history, self.nas_space,
             _time.monotonic() - t0, stats,

@@ -46,6 +46,7 @@ from repro.core.proxy import CachedAccuracy
 from repro.core.scenarios import Scenario
 from repro.core.search import SearchConfig, SearchResult
 from repro.core.space import Space
+from repro.obs import metrics as obs_metrics
 
 DRIVERS = {
     "joint": search_lib.joint_search,
@@ -119,9 +120,15 @@ class SweepResult:
 
     @property
     def cross_scenario_hit_rate(self) -> float:
+        """Recomputed from the folded counters via the shared rate helper
+        (process-mode store_stats are merged across worker segments, so the
+        counters — not a pre-baked rate — are the source of truth)."""
         if not self.store_stats:
             return 0.0
-        return self.store_stats["cross_hit_rate"]
+        return obs_metrics.rate(
+            self.store_stats.get("cross_hits", 0),
+            self.store_stats.get("gets", 0),
+        )
 
     def best_by_scenario(self) -> dict[str, Optional[dict]]:
         return {o.scenario.name: o.best for o in self.outcomes}

@@ -53,6 +53,8 @@ from repro.core import simulator
 from repro.core.pareto import DEFAULT_OBJECTIVES, _canon, _dominates
 from repro.hw.analytic import ANALYTIC
 from repro.hw.backend import CostBackend, HwMetrics
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -67,13 +69,16 @@ class CascadeStats:
     refine_invalid: int = 0   # of those, rejected by the full backend
     batches: int = 0
 
+    def __post_init__(self):
+        obs_metrics.REGISTRY.register("cascade", self)
+
     @property
     def pruned(self) -> int:
         return self.static_invalid + self.envelope_pruned + self.dominance_pruned
 
     @property
     def prune_rate(self) -> float:
-        return self.pruned / max(self.requested, 1)
+        return obs_metrics.rate(self.pruned, self.requested)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -167,6 +172,8 @@ class CascadeBackend(CostBackend):
         accs=None,
     ) -> HwMetrics:
         n = len(specs)
+        tr = obs_trace.active()
+        t0 = tr.now() if tr is not None else 0.0
         bounds = simulator.lower_bounds(list(specs), list(hs), batch=batch)
         records: list = [None] * n
         static = bounds["invalid"]
@@ -197,6 +204,13 @@ class CascadeBackend(CostBackend):
                         keep.append(i)
                 survivors = keep
 
+        if tr is not None:
+            # the prefilter span covers bounds + envelope + dominance —
+            # everything the cascade does before paying for full simulation
+            tr.complete(
+                "cascade_prefilter", t0,
+                {"n": n, "survivors": len(survivors)},
+            )
         if survivors:
             with self._lock:
                 self.stats.refined += len(survivors)
@@ -204,13 +218,14 @@ class CascadeBackend(CostBackend):
             sub_accs = None
             if acc_of is not None:
                 sub_accs = [acc_of(i) for i in survivors]
-            hm = self.refine.estimate_batch(
-                [specs[i] for i in survivors],
-                [hs[i] for i in survivors],
-                batch=batch,
-                vecs=sub_vecs,
-                accs=sub_accs,
-            )
+            with obs_trace.span("cascade_refine", n=len(survivors)):
+                hm = self.refine.estimate_batch(
+                    [specs[i] for i in survivors],
+                    [hs[i] for i in survivors],
+                    batch=batch,
+                    vecs=sub_vecs,
+                    accs=sub_accs,
+                )
             with self._lock:
                 for j, (i, rec) in enumerate(zip(survivors, hm.records)):
                     records[i] = rec

@@ -14,7 +14,11 @@ source of truth for the flags they share and for turning them into a
   ``repro.runtime.SearchRuntime`` (durable store, checkpointer, budget), or
   ``None`` when nothing durable was requested. Tolerates namespaces that
   lack the sweep-only flags (``--checkpoint-dir``/``--resume``/...), so the
-  serve CLI can reuse it unchanged.
+  serve CLI can reuse it unchanged;
+* ``start_trace(args)`` / ``finish_trace(args, tracer, extra=)`` — the
+  ``--trace DIR`` lifecycle (``repro.obs``): start the process tracer
+  *before* the runtime is built (so per-namespace store accounting turns on
+  with it), stop it and write ``metrics.json`` at exit.
 """
 from __future__ import annotations
 
@@ -64,7 +68,47 @@ def shared_parser() -> argparse.ArgumentParser:
         help="wall-clock budget: stop (checkpointing everything) after this "
         "much time; for serve, the wait deadline per on-demand search",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="DIR",
+        help="record telemetry into DIR: Chrome-trace spans "
+        "(trace.jsonl, one .worker-<k> segment per process worker) plus "
+        "metrics.json; merge and summarize with scripts/obs_report.py "
+        "(off by default; tracing never changes results or store bytes)",
+    )
     return ap
+
+
+def start_trace(args):
+    """Start the process tracer when ``--trace DIR`` was given (else None).
+    Call before ``build_runtime``: stores built under an active tracer also
+    record per-namespace hit rates."""
+    trace_dir = getattr(args, "trace", None)
+    if not trace_dir:
+        return None
+    from repro.obs import trace as obs_trace
+
+    return obs_trace.start(trace_dir)
+
+
+def finish_trace(args, tracer, extra=None, file=None) -> None:
+    """Stop the tracer started by ``start_trace`` and write the run's
+    ``metrics.json`` (registry export + CLI-provided extras) next to the
+    trace segments. No-op when tracing was off. ``file=`` redirects the
+    summary line (the serve CLI keeps stdout for JSON answers)."""
+    if tracer is None:
+        return
+    from repro.obs import report as obs_report
+    from repro.obs import trace as obs_trace
+
+    obs_trace.stop()
+    obs_report.write_metrics(args.trace, extra=extra)
+    print(
+        f"trace: {args.trace} (merge + report with "
+        f"scripts/obs_report.py {args.trace})",
+        file=file,
+    )
 
 
 def build_runtime(args):

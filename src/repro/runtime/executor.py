@@ -55,9 +55,12 @@ from repro.core.engine import RecordStore
 from repro.core.pareto import DEFAULT_OBJECTIVES, ParetoFrontier
 from repro.core.search import SearchInterrupted, SearchResult
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from repro.runtime.checkpoint import Checkpointer, result_from_state, result_state
 
-from repro.runtime.store import DurableRecordStore
+from repro.runtime.store import _SEGMENT_INFIX, DurableRecordStore
 
 # test/CI hook: "<worker_id>:<admits>" makes that worker hard-exit (os._exit,
 # as a kill -9 would) after its Nth admission — a deterministic mid-search
@@ -280,6 +283,21 @@ def _ship_error(e: BaseException) -> dict:
             "traceback": traceback.format_exc()}
 
 
+def _partial_segment_stats(path: Path, offset: int) -> dict:
+    """Reconstruct a killed worker's store counters from its segment: every
+    complete (newline-terminated) line past the pre-spawn ``offset`` is one
+    ``put`` it made this run. gets/hits died with the process — only the
+    durable evidence is folded, tagged ``partial_workers`` so reports can
+    tell a reconstruction from a clean exit."""
+    try:
+        with open(path, "rb") as f:
+            f.seek(offset)
+            appended = f.read().count(b"\n")
+    except FileNotFoundError:
+        appended = 0
+    return {"puts": appended, "appended": appended, "partial_workers": 1}
+
+
 def _process_worker(
     worker_id: int,
     payload: bytes,
@@ -296,8 +314,13 @@ def _process_worker(
     forked): jax state is never shared with the parent, and XLA_FLAGS set by
     the parent before start() are honored on this process's first jax
     import."""
+    t_spawn = time.monotonic_ns()  # worker-main entry: the spawn span start
     try:
         jobs: list[SearchJob] = pickle.loads(payload)
+        # trace enablement crosses the spawn boundary as an env var (like
+        # XLA_FLAGS); the tracer must exist before the store is built so
+        # per-namespace accounting turns on with it
+        tracer = obs_trace.start_from_env(worker=worker_id)
         budget = None if budget_spec is None else SharedBudget(**budget_spec)
         store = None
         if store_path is not None:
@@ -320,21 +343,31 @@ def _process_worker(
         out_q.put(("ready", worker_id, None))
         if go_event is not None:
             go_event.wait()
+        if tracer is not None:
+            # import + store rehydration + (sync_start) barrier wait — the
+            # phase a merged trace shows before the per-job steady state
+            tracer.complete_since_ns("worker_spawn", t_spawn, {"jobs": len(jobs)})
         for job in jobs:
-            try:
-                res = job.fn(**job.kwargs, runtime=runtime, tag=job.name)
-                out_q.put(("done", job.name, result_state(res)))
-            except SearchInterrupted as e:
-                out_q.put(
-                    (
-                        "interrupted",
-                        job.name,
-                        {"tag": e.tag, "samples_done": e.samples_done,
-                         "samples": e.samples},
+            with obs_trace.span("job", job=job.name):
+                try:
+                    res = job.fn(**job.kwargs, runtime=runtime, tag=job.name)
+                    out_q.put(("done", job.name, result_state(res)))
+                except SearchInterrupted as e:
+                    out_q.put(
+                        (
+                            "interrupted",
+                            job.name,
+                            {
+                                "tag": e.tag,
+                                "samples_done": e.samples_done,
+                                "samples": e.samples,
+                            },
+                        )
                     )
-                )
-            except Exception as e:  # noqa: BLE001 - isolate sibling searches
-                out_q.put(("error", job.name, _ship_error(e)))
+                except Exception as e:  # noqa: BLE001 - isolate siblings
+                    out_q.put(("error", job.name, _ship_error(e)))
+            if tracer is not None:
+                tracer.flush()  # a later hard kill keeps finished-job spans
         stats = None
         if store is not None:
             store.flush()
@@ -344,6 +377,8 @@ def _process_worker(
         out_q.put(("exit", worker_id, stats))
     except BaseException as e:  # noqa: BLE001 - ship, don't die silently
         out_q.put(("fatal", worker_id, _ship_error(e)))
+    finally:
+        obs_trace.stop()
 
 
 class SearchExecutor:
@@ -400,13 +435,14 @@ class SearchExecutor:
         t0 = time.monotonic()
 
         def run_one(job: SearchJob) -> JobOutcome:
-            try:
-                res = job.fn(**job.kwargs, runtime=self.runtime, tag=job.name)
-                return JobOutcome(job.name, "done", result=res)
-            except SearchInterrupted as e:
-                return JobOutcome(job.name, "interrupted", error=e)
-            except Exception as e:  # noqa: BLE001 - isolate sibling searches
-                return JobOutcome(job.name, "error", error=e)
+            with obs_trace.span("job", job=job.name):
+                try:
+                    res = job.fn(**job.kwargs, runtime=self.runtime, tag=job.name)
+                    return JobOutcome(job.name, "done", result=res)
+                except SearchInterrupted as e:
+                    return JobOutcome(job.name, "interrupted", error=e)
+                except Exception as e:  # noqa: BLE001 - isolate siblings
+                    return JobOutcome(job.name, "error", error=e)
 
         with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
             outcomes = list(pool.map(run_one, jobs))
@@ -452,10 +488,23 @@ class SearchExecutor:
 
     def _run_processes(self, jobs: list[SearchJob]) -> ExecutorReport:
         t0 = time.monotonic()
+        parent_tracer = obs_trace.active()
+        t_trace = parent_tracer.now() if parent_tracer is not None else 0.0
         runtime = self.runtime
         store_path = self._store_path()
         k = max(1, min(self.max_workers, len(jobs)))
         shards = self._shard(jobs, k)
+        # pre-spawn segment sizes: if a worker dies before shipping its
+        # counters, the complete lines it appended past this offset are the
+        # durable record of the work it did (folded into the aggregate below)
+        seg_offsets: dict[int, int] = {}
+        if store_path is not None:
+            for wid in range(k):
+                seg = store_path.with_name(f"{store_path.name}{_SEGMENT_INFIX}{wid}")
+                try:
+                    seg_offsets[wid] = seg.stat().st_size
+                except FileNotFoundError:
+                    seg_offsets[wid] = 0
         payloads = []
         for wid, shard in enumerate(shards):
             try:
@@ -497,6 +546,11 @@ class SearchExecutor:
                 f"{self.devices_per_worker}"
             )
             os.environ["XLA_FLAGS"] = f"{saved_flags} {flag}" if saved_flags else flag
+        # ship trace enablement the same way XLA_FLAGS crosses spawn: set the
+        # env var for the children, restore the parent's value right after
+        saved_trace = os.environ.get(obs_trace.TRACE_DIR_ENV)
+        if parent_tracer is not None:
+            os.environ[obs_trace.TRACE_DIR_ENV] = str(parent_tracer.dir)
         procs: list = []
         try:
             for wid, payload in enumerate(payloads):
@@ -523,6 +577,11 @@ class SearchExecutor:
                     os.environ.pop("XLA_FLAGS", None)
                 else:
                     os.environ["XLA_FLAGS"] = saved_flags
+            if parent_tracer is not None:
+                if saved_trace is None:
+                    os.environ.pop(obs_trace.TRACE_DIR_ENV, None)
+                else:
+                    os.environ[obs_trace.TRACE_DIR_ENV] = saved_trace
 
         outcomes: dict[str, JobOutcome] = {}
         worker_stats: dict[int, Optional[dict]] = {}
@@ -550,9 +609,7 @@ class SearchExecutor:
                 outcomes[who] = JobOutcome(
                     who,
                     "error",
-                    error=WorkerError(
-                        f"{payload['repr']}\n{payload['traceback']}"
-                    ),
+                    error=WorkerError(f"{payload['repr']}\n{payload['traceback']}"),
                 )
             elif kind == "exit":
                 worker_stats[who] = payload
@@ -566,6 +623,10 @@ class SearchExecutor:
             if go_event is not None and not go_event.is_set():
                 if spawn_s is None and len(ready) >= len(procs):
                     spawn_s = time.monotonic() - t0
+                    if parent_tracer is not None:
+                        parent_tracer.complete(
+                            "spawn_barrier", t_trace, {"workers": len(procs)}
+                        )
                     go_event.set()
                 elif not alive:
                     go_event.set()  # never gate survivors on a dead worker
@@ -590,9 +651,7 @@ class SearchExecutor:
                 budget._granted = int(budget_spec["granted"].value)
                 budget.exhausted = bool(budget_spec["exhausted"].value)
 
-        shard_of = {
-            job.name: wid for wid, shard in enumerate(shards) for job in shard
-        }
+        shard_of = {job.name: wid for wid, shard in enumerate(shards) for job in shard}
         for wid, shard in enumerate(shards):
             for job in shard:
                 if job.name in outcomes:
@@ -627,8 +686,24 @@ class SearchExecutor:
         if store is not None:
             store.refresh()  # log shipping: fold worker segments into memory
             store.flush()
+            # a worker that died before its "exit" message never shipped its
+            # counters, but the complete lines it appended to its segment are
+            # durable — reconstruct a partial stats record from them so the
+            # aggregate reflects work every worker paid for
+            partials = [
+                _partial_segment_stats(
+                    store_path.with_name(f"{store_path.name}{_SEGMENT_INFIX}{wid}"),
+                    seg_offsets.get(wid, 0),
+                )
+                for wid in range(k)
+                if wid not in worker_stats
+            ]
             store_stats = self._aggregate_stats(
-                [s for s in worker_stats.values() if s is not None]
+                [s for s in worker_stats.values() if s is not None] + partials
+            )
+        if parent_tracer is not None:
+            parent_tracer.complete(
+                "executor_run", t_trace, {"jobs": len(jobs), "workers": k}
             )
         return ExecutorReport(
             outcomes={name: outcomes[name] for name in (j.name for j in jobs)},
@@ -641,15 +716,24 @@ class SearchExecutor:
 
     @staticmethod
     def _aggregate_stats(stats: list[dict]) -> dict:
-        """Sum the workers' per-segment store counters into one report with
-        the same shape a shared thread-mode store produces."""
-        total = {"gets": 0, "hits": 0, "cross_hits": 0, "puts": 0,
-                 "evictions": 0, "appended": 0}
-        for s in stats:
-            for key in total:
-                total[key] += int(s.get(key, 0))
-        total["hit_rate"] = total["hits"] / max(total["gets"], 1)
-        total["cross_hit_rate"] = total["cross_hits"] / max(total["gets"], 1)
+        """Fold the workers' per-segment store counters into one report with
+        the same shape a shared thread-mode store produces. Routed through
+        ``repro.obs.metrics.merge_stats``: counters sum, ``hit_rate`` /
+        ``cross_hit_rate`` are recomputed from the summed counters (never
+        summed or averaged), and any extra keys a worker ships (e.g.
+        ``partial_workers`` from a crash reconstruction) fold in instead of
+        being dropped."""
+        total = obs_metrics.merge_stats(
+            stats,
+            defaults={
+                "gets": 0,
+                "hits": 0,
+                "cross_hits": 0,
+                "puts": 0,
+                "evictions": 0,
+                "appended": 0,
+            },
+        )
         total["workers"] = len(stats)
         return total
 

@@ -52,6 +52,7 @@ from pathlib import Path
 from typing import Optional, Union
 
 from repro.core.engine import RecordStore
+from repro.obs import trace as obs_trace
 
 _SEGMENT_INFIX = ".worker-"
 
@@ -201,11 +202,12 @@ class DurableRecordStore(RecordStore):
         log or any segment since the last load/refresh. Returns the number of
         fresh entries applied (also accumulated in ``shipped``). Safe against
         a live writer: only complete newline-terminated lines are consumed."""
-        with self._lock:
+        with obs_trace.span("store_refresh") as sp, self._lock:
             applied = 0
             for p in self._log_paths():
                 applied += self._consume(p, count_torn_tail=False)
             self.shipped += applied
+            sp.set(applied=applied)
             return applied
 
     def _handle(self):
@@ -243,7 +245,7 @@ class DurableRecordStore(RecordStore):
         the rename nor the segment unlinks can be undone by a crash. Returns
         the number of log lines dropped (stale duplicates + evicted keys +
         merged segment lines)."""
-        with self._lock:
+        with obs_trace.span("store_compact"), self._lock:
             if self.read_only:
                 raise RuntimeError(
                     f"store opened read_only ({self.path}): compact is "

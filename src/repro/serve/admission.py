@@ -36,6 +36,7 @@ from concurrent.futures import Future, ThreadPoolExecutor, wait as _fwait
 from typing import Callable, Optional
 
 from repro.core.search import SearchConfig
+from repro.obs import trace as obs_trace
 from repro.runtime.executor import Budget, SearchExecutor, scenario_jobs
 from repro.serve.query import FrontierServer, scenario_key
 
@@ -129,50 +130,62 @@ class AdmissionController:
         """Answer ``scenario`` from the frontier; admit a budgeted search
         when the envelope is uncovered. With ``wait=True`` the call blocks
         until any admitted search has folded in and the answer is final."""
-        answer = self.server.answer(scenario)
-        if answer["feasible"]:
-            return Admission(scenario, "served", answer)
-        key = scenario_key(scenario)
-        with self._lock:
-            fut = self._inflight.get(key)
-            if fut is None:
-                if key in self._searched:
-                    return Admission(scenario, "exhausted", answer)
-                fut = self._pool.submit(self._search_and_fold, scenario, key)
-                self._inflight[key] = fut
-                self.admitted += 1
-        adm = Admission(scenario, "searching", answer, future=fut)
-        if wait:
-            fut.result()
-            adm.answer = self.server.answer(scenario)
-        return adm
+        with obs_trace.span(
+            "admission_query", scenario=getattr(scenario, "name", None)
+        ) as sp:
+            answer = self.server.answer(scenario)
+            if answer["feasible"]:
+                sp.set(status="served")
+                return Admission(scenario, "served", answer)
+            key = scenario_key(scenario)
+            with self._lock:
+                fut = self._inflight.get(key)
+                if fut is None:
+                    if key in self._searched:
+                        sp.set(status="exhausted")
+                        return Admission(scenario, "exhausted", answer)
+                    fut = self._pool.submit(self._search_and_fold, scenario, key)
+                    self._inflight[key] = fut
+                    self.admitted += 1
+            sp.set(status="searching")
+            adm = Admission(scenario, "searching", answer, future=fut)
+            if wait:
+                fut.result()
+                adm.answer = self.server.answer(scenario)
+            return adm
 
     # ---- background search ---------------------------------------------------
 
     def _search_and_fold(self, scenario, key: tuple) -> int:
         try:
-            jobs = scenario_jobs(
-                [scenario],
-                self.nas_space,
-                self.acc_fn,
-                cfg=self.cfg.search_config(),
-                driver=self.cfg.driver,
-                backend=self.backend,
-            )
-            executor = SearchExecutor(
-                store=self.store,
-                max_workers=1,
-                budget=Budget(max_samples=self.cfg.budget_samples),
-            )
-            report = executor.run(jobs)
-            for outcome in report.outcomes.values():
-                if outcome.status == "error":
-                    raise outcome.error
-            return self.server.fold(report.frontier.records())
+            with obs_trace.span(
+                "admission_search", scenario=getattr(scenario, "name", None)
+            ):
+                return self._run_search(scenario)
         finally:
             with self._lock:
                 self._searched.add(key)
                 self._inflight.pop(key, None)
+
+    def _run_search(self, scenario) -> int:
+        jobs = scenario_jobs(
+            [scenario],
+            self.nas_space,
+            self.acc_fn,
+            cfg=self.cfg.search_config(),
+            driver=self.cfg.driver,
+            backend=self.backend,
+        )
+        executor = SearchExecutor(
+            store=self.store,
+            max_workers=1,
+            budget=Budget(max_samples=self.cfg.budget_samples),
+        )
+        report = executor.run(jobs)
+        for outcome in report.outcomes.values():
+            if outcome.status == "error":
+                raise outcome.error
+        return self.server.fold(report.frontier.records())
 
     # ---- lifecycle -----------------------------------------------------------
 

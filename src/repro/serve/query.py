@@ -45,6 +45,8 @@ from typing import Iterable, Mapping, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.pareto import DEFAULT_OBJECTIVES, ParetoFrontier
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 _MISS = object()
 
@@ -223,9 +225,12 @@ class ServeStats:
     folded_records: int = 0  # records offered through fold()
     evaluations: int = 0     # always 0: the serve tier never simulates
 
+    def __post_init__(self):
+        obs_metrics.REGISTRY.register("serve", self)
+
     @property
     def cache_hit_rate(self) -> float:
-        return self.cache_hits / max(self.queries, 1)
+        return obs_metrics.rate(self.cache_hits, self.queries)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -286,6 +291,17 @@ class FrontierServer:
         """The record ``scenario`` would select off the frontier — equal to
         ``ParetoFrontier.best(scenario)`` — as a fresh dict (callers may
         mutate). Cached per (index version, canonicalized scenario)."""
+        # manual tracer guard, not span(): this path serves in ~a µs and the
+        # context-manager wrapper would be a measurable fraction of it
+        tr = obs_trace.active()
+        if tr is None:
+            return self._best(scenario)
+        t0 = tr.now()
+        rec = self._best(scenario)
+        tr.complete("serve_best", t0, {"scenario": getattr(scenario, "name", None)})
+        return rec
+
+    def _best(self, scenario) -> Optional[dict]:
         self.stats.queries += 1
         idx = self._index  # one atomic read: a consistent view for the query
         key = (idx.version, scenario_key(scenario))
@@ -327,12 +343,16 @@ class FrontierServer:
         read index. Returns the number of records that joined. Serialized
         across callers; readers are never blocked."""
         records = list(records)
-        with self._fold_lock:
-            added = self._frontier.add_many(records)
-            self.stats.folds += 1
-            self.stats.folded_records += len(records)
-            if added:
-                self._index = _Index(self._frontier, version=self._index.version + 1)
+        with obs_trace.span("snapshot_fold", n=len(records)) as sp:
+            with self._fold_lock:
+                added = self._frontier.add_many(records)
+                self.stats.folds += 1
+                self.stats.folded_records += len(records)
+                if added:
+                    self._index = _Index(
+                        self._frontier, version=self._index.version + 1
+                    )
+            sp.set(added=added)
         return added
 
     def merge_frontier(self, other: ParetoFrontier) -> int:
