@@ -38,6 +38,7 @@ BENCHES = [
     ("hw_backend", "benchmarks.hw_backend_bench"),
     ("runtime", "benchmarks.runtime_bench"),
     ("executor", "benchmarks.executor_bench"),
+    ("transfer", "benchmarks.transfer_bench"),
     ("serve", "benchmarks.serve_bench"),
     ("oneshot", "benchmarks.oneshot_bench"),
     ("meshsearch", "benchmarks.meshsearch_bench"),
@@ -46,7 +47,7 @@ BENCHES = [
 ]
 
 QUICK = ("engine", "search_loop", "hw_backend", "roofline", "serve",
-         "executor", "obs")
+         "executor", "transfer", "obs")
 
 
 def main() -> None:

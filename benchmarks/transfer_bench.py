@@ -1,0 +1,173 @@
+"""Scenario-transfer amortization benchmark -> BENCH_transfer.json.
+
+Sweeps a stratified slice of the registered scenario grid
+(``repro.core.scenarios.grid``: LLM model × train/serve × sequence length ×
+SKU envelope × traffic tier, targets derived through the pod roofline)
+through ``CascadeBackend``, cold versus transfer-scheduled
+(``sweep.plan_transfer``): feature-space medoids run cold at the full
+budget, every other scenario warm-starts from its nearest medoid's
+checkpoint at a fraction of the budget. The claim under test is the PR's
+headline — warm-start amortization turns an N-scenario sweep from N full
+searches into ~sqrt(N) full + (N - sqrt(N)) short ones.
+
+Reported:
+
+* ``speedup`` — cold wall / transfer wall over the same grid slice
+  (acceptance: >= 3x);
+* ``samples_to_opt`` — mean sample index at which each scenario's own
+  search first hit its final best record, cold vs transfer (warm searches
+  should land their optimum earlier in their shorter budget);
+* ``family_divergence`` — per model family, how many scenarios' frontier-
+  selected best configs differ between the cold and transfer runs (the
+  quality cost of the amortization, ideally 0);
+* ``quick_match`` — per-scenario best configs on the quick preset
+  (paper-use-cases), transfer vs cold: must be identical (asserted, 6/6);
+* ``spawn_s`` — one-time process-pool spin-up from a 2-worker process-mode
+  transfer run (the persistent pool spawns once and serves both the cold
+  medoid wave and the warm fan-out; reported once per pool).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import nas, scenarios as scenarios_lib
+from repro.core import sweep as sweep_lib
+from repro.core.proxy import SurrogateAccuracy
+from repro.core.search import SearchConfig
+
+
+def _grid_slice(n: int) -> list:
+    """A stratified slice of the full grid: stride-sampled so every model
+    family / mode / tier shows up even at small n."""
+    full = scenarios_lib.grid()
+    if n >= len(full):
+        return full
+    stride = max(len(full) // n, 1)
+    return full[::stride][:n]
+
+
+def _sweep(scs, samples: int, transfer: bool, backend,
+           warm_samples=None, workers: int = 0,
+           processes: bool = False) -> sweep_lib.SweepResult:
+    cfg = sweep_lib.SweepConfig(
+        search=SearchConfig(samples=samples, batch=16, controller="ppo"),
+        backend=backend,
+        transfer=transfer,
+        transfer_samples=warm_samples,
+        workers=workers,
+        processes=processes,
+        sync_start=processes,
+    )
+    return sweep_lib.SweepRunner(
+        scs, nas.tiny_space(), SurrogateAccuracy(), cfg
+    ).run()
+
+
+def _samples_to_opt(result: sweep_lib.SweepResult) -> float:
+    """Mean sample index of each scenario's own best record (first time the
+    search saw the configuration it ended on)."""
+    idx = [
+        o.result.best_record["sample_idx"]
+        for o in result.outcomes
+        if o.result.best_record is not None
+    ]
+    return sum(idx) / max(len(idx), 1)
+
+
+def _family(name: str) -> str:
+    # grid-{model}-{mode}-s{seq}k-{sku}-{tier}
+    parts = name.split("-")
+    return parts[1] if len(parts) > 2 and parts[0] == "grid" else name
+
+
+def run(fast: bool = True) -> dict:
+    from repro.hw import CascadeBackend
+
+    n = 60 if fast else 300
+    # high cold budget / short warm budget: the amortization claim is about
+    # controller-update work, so the bench keeps per-scenario fixed costs
+    # (engine + controller init, identical in both runs) from diluting it —
+    # and leaves margin over the acceptance ratio against container timing
+    # wobble
+    samples = 384
+    warm_samples = 16
+    scs = _grid_slice(n)
+
+    backend = CascadeBackend(scenarios=tuple(scs))
+    t0 = time.monotonic()
+    cold = _sweep(scs, samples, transfer=False, backend=backend)
+    cold_wall = time.monotonic() - t0
+
+    backend = CascadeBackend(scenarios=tuple(scs))
+    t0 = time.monotonic()
+    warm = _sweep(scs, samples, transfer=True, backend=backend,
+                  warm_samples=warm_samples)
+    warm_wall = time.monotonic() - t0
+    speedup = cold_wall / max(warm_wall, 1e-9)
+
+    transferred = sum(
+        1 for o in warm.outcomes if o.result.transferred_from is not None
+    )
+    families: dict[str, dict] = {}
+    cold_best = cold.best_by_scenario()
+    warm_best = warm.best_by_scenario()
+    for sc in scs:
+        fam = families.setdefault(
+            _family(sc.name), {"scenarios": 0, "diverged": 0}
+        )
+        fam["scenarios"] += 1
+        a = (cold_best[sc.name] or {}).get("vec")
+        b = (warm_best[sc.name] or {}).get("vec")
+        if a != b:
+            fam["diverged"] += 1
+    diverged = sum(f["diverged"] for f in families.values())
+
+    # quick-preset equivalence: the transfer schedule must not change any
+    # per-scenario winner on the paper's use cases
+    quick = scenarios_lib.expand("paper-use-cases")
+    qc = _sweep(quick, 64, transfer=False, backend=None)
+    qw = _sweep(quick, 64, transfer=True, backend=None)
+    qcb, qwb = qc.best_by_scenario(), qw.best_by_scenario()
+    quick_matched = sum(
+        1 for k in qcb
+        if (qcb[k] or {}).get("vec") == (qwb[k] or {}).get("vec")
+    )
+    quick_match = f"{quick_matched}/{len(qcb)}"
+
+    # persistent-pool spawn cost: a 2-worker process-mode transfer run —
+    # the pool spawns once, serves the cold medoid wave AND the warm
+    # fan-out, and spawn_s is reported once for the whole sweep
+    pool = _sweep(_grid_slice(12), 32, transfer=True, backend=None,
+                  workers=2, processes=True)
+    spawn_s = pool.spawn_s or 0.0
+
+    out = {
+        "n_evals": sum(len(o.result.history) for o in cold.outcomes)
+        + sum(len(o.result.history) for o in warm.outcomes),
+        "scenarios": len(scs),
+        "samples_per_scenario": samples,
+        "cold_wall_s": round(cold_wall, 2),
+        "transfer_wall_s": round(warm_wall, 2),
+        "transferred": transferred,
+        "samples_to_opt": {
+            "cold": round(_samples_to_opt(cold), 1),
+            "transfer": round(_samples_to_opt(warm), 1),
+        },
+        "family_divergence": families,
+        "derived": {
+            "speedup": round(speedup, 2),
+            "transferred": transferred,
+            "diverged": diverged,
+            "quick_match": quick_match,
+            "spawn_s": round(spawn_s, 2),
+        },
+    }
+    assert quick_matched == len(qcb), (
+        f"transfer changed quick-preset winners: {quick_match}"
+    )
+    assert transferred > 0, "no scenario actually warm-started"
+    return out
+
+
+if __name__ == "__main__":
+    print(run()["derived"])

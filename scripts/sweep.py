@@ -34,6 +34,10 @@ rules out, and prints the per-stage prune counters).
   PYTHONPATH=src python scripts/sweep.py --quick --store /tmp/s.jsonl --resume
   PYTHONPATH=src python scripts/sweep.py --quick --store /tmp/s.jsonl \\
       --workers 4 --processes
+  PYTHONPATH=src python scripts/sweep.py --grid 24 --transfer --quick \\
+      --backend cascade
+  PYTHONPATH=src python scripts/sweep.py --grid --transfer \\
+      --store /tmp/grid.jsonl --workers 4 --processes
   PYTHONPATH=src python scripts/sweep.py --list
 """
 from __future__ import annotations
@@ -110,6 +114,40 @@ def build_parser() -> argparse.ArgumentParser:
         help="shard scenarios across --workers spawned processes, each "
         "appending to its own store segment (log shipping; needs --store, "
         "or runs private per-worker caches without one)",
+    )
+    ap.add_argument(
+        "--transfer",
+        action="store_true",
+        help="scenario-transfer scheduling (repro.core.sweep.plan_transfer): "
+        "feature-space medoids run cold at the full budget, every other "
+        "scenario warm-starts from its nearest medoid's checkpoint at a "
+        "quarter budget (joint/fixed_hw drivers)",
+    )
+    ap.add_argument(
+        "--transfer-samples",
+        type=int,
+        default=None,
+        metavar="N",
+        help="samples for warm (transferred) searches (default: samples/4)",
+    )
+    ap.add_argument(
+        "--transfer-medoids",
+        type=int,
+        default=None,
+        metavar="K",
+        help="cold medoid count (default: ceil(sqrt(scenarios)))",
+    )
+    ap.add_argument(
+        "--grid",
+        type=int,
+        default=None,
+        nargs="?",
+        const=0,
+        metavar="N",
+        help="sweep the registered scenario grid (repro.core.scenarios.grid: "
+        "LLM model × train/serve × seq len × SKU × traffic tier, targets "
+        "derived through the pod roofline); N caps the expansion, bare "
+        "--grid takes the full product",
     )
     ap.add_argument(
         "--devices-per-worker",
@@ -198,6 +236,10 @@ def main() -> None:
         return
 
     selected: list = []
+    if args.grid is not None:
+        selected.extend(
+            scenarios.grid(limit=args.grid if args.grid > 0 else None)
+        )
     if args.preset:
         selected.append(args.preset)
     if args.scenarios:
@@ -225,6 +267,9 @@ def main() -> None:
         workers=args.workers,
         processes=args.processes,
         devices_per_worker=args.devices_per_worker,
+        transfer=args.transfer,
+        transfer_samples=args.transfer_samples,
+        transfer_medoids=args.transfer_medoids,
     )
     runner = sweep.SweepRunner(selected, space, proxy.SurrogateAccuracy(), cfg)
     cfg.backend = build_backend(args, runner)

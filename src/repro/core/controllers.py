@@ -102,6 +102,32 @@ class _CategoricalPolicy:
         rows = np.arange(len(idx)) + offset
         self._set_logits(self.logits.at[rows, idx].set(logit))
 
+    def transfer_from(self, state: dict) -> None:
+        """Warm-start this controller from a *donor* search's checkpointed
+        controller state (scenario-transfer: the donor solved a nearby
+        scenario over the same space). Adopts the donor's converged policy
+        logits — the expensive part of a search — while keeping this
+        controller's own seeded RNG stream and fresh optimizer moments, so
+        the warm search explores around the donor's optimum under its *own*
+        objective rather than replaying the donor's trajectory. Raises
+        ``ValueError`` when the snapshot is from a different trajectory
+        version or an incompatible (differently shaped) space; callers fall
+        back to a cold start."""
+        if state.get("version") != TRAJECTORY_VERSION:
+            raise ValueError(
+                f"transfer donor snapshot is trajectory "
+                f"v{state.get('version')}, this build runs "
+                f"v{TRAJECTORY_VERSION}"
+            )
+        logits = np.asarray(state["logits"])
+        if tuple(logits.shape) != tuple(np.shape(self.logits)):
+            raise ValueError(
+                f"transfer donor logits shape {tuple(logits.shape)} does not "
+                f"match this space's {tuple(np.shape(self.logits))} — "
+                f"incompatible search space"
+            )
+        self._set_logits(jnp.asarray(logits, jnp.float32))
+
     def sample(self, n: int) -> np.ndarray:
         """Draw ``n`` decision vectors with ONE generator call: inverse-CDF
         over the per-decision categorical distributions. The (D, C_max) CDF
@@ -149,6 +175,22 @@ def _adam_step(lg, m, v, t, g, maskj, lr, clip):
     return lg, m, v, t
 
 
+# Compiled update functions, shared across controller INSTANCES. jax.jit
+# caches by function identity, so a per-instance ``jax.jit(update)`` closure
+# recompiles XLA for every new controller — ~0.3s of fixed cost per search,
+# which dwarfs the actual update work in multi-scenario sweeps. Keyed by
+# (kind, mask, config): everything the closure bakes into the trace.
+_UPDATE_JIT_CACHE: dict = {}
+
+
+def _cached_update_jit(kind: str, mask, cfg, builder):
+    key = (kind, mask.shape, mask.tobytes(), dataclasses.astuple(cfg))
+    fn = _UPDATE_JIT_CACHE.get(key)
+    if fn is None:
+        fn = _UPDATE_JIT_CACHE[key] = jax.jit(builder())
+    return fn
+
+
 @dataclasses.dataclass
 class PPOConfig:
     lr: float = 5e-4
@@ -171,7 +213,8 @@ class PPOController(_CategoricalPolicy):
 
     def _update_fn(self):
         """The fused jitted update: old log-probs + the whole epoch loop
-        (grad, clip, Adam) in one dispatch on the (D, C_max) tensor."""
+        (grad, clip, Adam) in one dispatch on the (D, C_max) tensor.
+        Compiled once per (mask, config) and shared across instances."""
         fn = getattr(self, "_update_jit", None)
         if fn is not None:
             return fn
@@ -179,28 +222,31 @@ class PPOController(_CategoricalPolicy):
         maskj = jnp.asarray(self._mask)
         n_dec = self._mask.shape[0]
 
-        def loss_fn(lg, vecs, adv, old):
-            lp, ent = _masked_logp_entropy(lg, maskj, vecs)
-            ratio = jnp.exp(lp - old)
-            clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps)
-            obj = jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
-            return -(obj + cfg.entropy_coef * ent / n_dec)
+        def build():
+            def loss_fn(lg, vecs, adv, old):
+                lp, ent = _masked_logp_entropy(lg, maskj, vecs)
+                ratio = jnp.exp(lp - old)
+                clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps)
+                obj = jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+                return -(obj + cfg.entropy_coef * ent / n_dec)
 
-        def update(lg, m, v, t, vecs, adv):
-            old, _ = _masked_logp_entropy(lg, maskj, vecs)
+            def update(lg, m, v, t, vecs, adv):
+                old, _ = _masked_logp_entropy(lg, maskj, vecs)
 
-            def epoch(carry, _):
-                lg, m, v, t = carry
-                g = jax.grad(loss_fn)(lg, vecs, adv, old)
-                step = _adam_step(lg, m, v, t, g, maskj, cfg.lr, cfg.grad_clip)
-                return step, None
+                def epoch(carry, _):
+                    lg, m, v, t = carry
+                    g = jax.grad(loss_fn)(lg, vecs, adv, old)
+                    step = _adam_step(lg, m, v, t, g, maskj, cfg.lr, cfg.grad_clip)
+                    return step, None
 
-            (lg, m, v, t), _ = jax.lax.scan(
-                epoch, (lg, m, v, t), None, length=cfg.epochs
-            )
-            return lg, m, v, t
+                (lg, m, v, t), _ = jax.lax.scan(
+                    epoch, (lg, m, v, t), None, length=cfg.epochs
+                )
+                return lg, m, v, t
 
-        self._update_jit = jax.jit(update)
+            return update
+
+        self._update_jit = _cached_update_jit("ppo", self._mask, cfg, build)
         return self._update_jit
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
@@ -248,6 +294,14 @@ class PPOController(_CategoricalPolicy):
         self.baseline = state["baseline"]
         self._b_init = state["b_init"]
 
+    def transfer_from(self, state: dict) -> None:
+        super().transfer_from(state)
+        # the donor's reward baseline is a decent prior for a *nearby*
+        # objective; the first warm batch then gets a meaningful advantage
+        # signal instead of re-bootstrapping from its own mean
+        self.baseline = float(state.get("baseline", 0.0))
+        self._b_init = bool(state.get("b_init", False))
+
 
 @dataclasses.dataclass
 class ReinforceConfig:
@@ -276,15 +330,18 @@ class ReinforceController(_CategoricalPolicy):
         maskj = jnp.asarray(self._mask)
         n_dec = self._mask.shape[0]
 
-        def loss_fn(lg, vecs, adv):
-            lp, ent = _masked_logp_entropy(lg, maskj, vecs)
-            return -(jnp.mean(lp * adv) + cfg.entropy_coef * ent / n_dec)
+        def build():
+            def loss_fn(lg, vecs, adv):
+                lp, ent = _masked_logp_entropy(lg, maskj, vecs)
+                return -(jnp.mean(lp * adv) + cfg.entropy_coef * ent / n_dec)
 
-        def update(lg, m, v, t, vecs, adv):
-            g = jax.grad(loss_fn)(lg, vecs, adv)
-            return _adam_step(lg, m, v, t, g, maskj, cfg.lr, 1.0)
+            def update(lg, m, v, t, vecs, adv):
+                g = jax.grad(loss_fn)(lg, vecs, adv)
+                return _adam_step(lg, m, v, t, g, maskj, cfg.lr, 1.0)
 
-        self._update_jit = jax.jit(update)
+            return update
+
+        self._update_jit = _cached_update_jit("reinforce", self._mask, cfg, build)
         return self._update_jit
 
     def update(self, vecs: np.ndarray, rewards: np.ndarray):
@@ -330,6 +387,11 @@ class ReinforceController(_CategoricalPolicy):
         self.opt_t = int(state["adam"]["t"])
         self.rng.bit_generator.state = state["rng"]
         self.baseline = state["baseline"]
+
+    def transfer_from(self, state: dict) -> None:
+        super().transfer_from(state)
+        b = state.get("baseline")
+        self.baseline = None if b is None else float(b)
 
 
 @dataclasses.dataclass
@@ -379,6 +441,26 @@ class EvolutionController:
 
     def best(self) -> np.ndarray:
         return max(self.population, key=lambda t: t[1])[0]
+
+    def transfer_from(self, state: dict) -> None:
+        """Scenario-transfer for evolution: seed the population with the
+        donor's. The donor's rewards were earned under *its* objective, so
+        they only bias early tournament selection — this search's own
+        updates replace them within one population turnover. RNG stays this
+        controller's own seeded stream."""
+        pop = state.get("population")
+        if not pop:
+            raise ValueError("transfer donor snapshot has no population")
+        want = (len(self.space.arity),)
+        vecs = [np.asarray(v) for v, _ in pop]
+        if any(v.shape != want for v in vecs):
+            raise ValueError(
+                f"transfer donor population vectors have shape "
+                f"{vecs[0].shape}, this space needs {want} — "
+                f"incompatible search space"
+            )
+        keep = self.cfg.population
+        self.population = [(v, float(r)) for v, (_, r) in zip(vecs, pop)][-keep:]
 
     def state(self) -> dict:
         return {

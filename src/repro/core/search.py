@@ -84,6 +84,29 @@ class SearchConfig:
     store: Optional[RecordStore] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class TransferSpec:
+    """Scenario-transfer warm start for one search (ROADMAP item 5).
+
+    ``donor`` names the solved scenario whose converged controller state
+    seeds this search (recorded as ``transferred_from`` provenance when the
+    adoption succeeds). The donor state arrives either in-memory
+    (``state=``: a full checkpoint state dict or a bare
+    ``controller.state()`` snapshot) or — the scheduler's path — by
+    ``donor_tag``, loaded through the runtime's ``Checkpointer`` (which is
+    exactly the log-shipping layout process workers already share).
+
+    Transfer is strictly best-effort: version or space incompatibility, a
+    missing donor checkpoint, or a controller without ``transfer_from``
+    all fall back to the ordinary cold start (provenance stays ``None``).
+    A search resuming from its *own* checkpoint ignores the spec entirely —
+    resume semantics stay bitwise-identical."""
+
+    donor: str
+    donor_tag: Optional[str] = None
+    state: Optional[dict] = None
+
+
 class SearchInterrupted(RuntimeError):
     """A search stopped at a batch boundary before exhausting its sample
     budget (runtime budget spent, deadline passed, or graceful stop). When a
@@ -107,6 +130,9 @@ class SearchResult:
     space: Space
     wall_s: float
     engine_stats: Optional[dict] = None
+    # scenario-transfer provenance: the donor scenario's name when this
+    # search warm-started from another search's checkpoint, else None
+    transferred_from: Optional[str] = None
 
     def pareto(self, x_key="latency_ms", y_key="accuracy") -> list[dict]:
         pts = [h for h in self.history if h.get("valid")]
@@ -155,9 +181,57 @@ def _runtime_store(cfg: SearchConfig, runtime) -> Optional[RecordStore]:
     return getattr(runtime, "store", None)
 
 
+def _apply_transfer(ctrl, transfer: TransferSpec, cfg: SearchConfig,
+                    space, ck, tag: str) -> Optional[str]:
+    """Best-effort warm start of ``ctrl`` from the transfer spec's donor
+    (see ``TransferSpec``). Returns the donor name when the state was
+    adopted, ``None`` on any cold fallback. Emits ``donor_load`` /
+    ``transfer_init`` trace spans so reports can attribute warm vs cold
+    setup time per scenario."""
+    tr = obs_trace.active()
+    donor_state = transfer.state
+    if donor_state is None and transfer.donor_tag is not None and ck is not None:
+        t0 = tr.now() if tr is not None else 0.0
+        donor_state = ck.load(transfer.donor_tag)
+        if tr is not None:
+            tr.complete("donor_load", t0, {
+                "tag": tag, "donor": transfer.donor,
+                "found": donor_state is not None,
+            })
+    t0 = tr.now() if tr is not None else 0.0
+    applied = False
+    reason = None
+    if donor_state is None:
+        reason = "no donor state"
+    else:
+        meta = donor_state.get("meta") or {}
+        # a full checkpoint state nests the controller snapshot; a bare
+        # controller.state() dict IS the snapshot
+        ctrl_state = donor_state.get("controller", donor_state)
+        if meta and meta.get("controller") != cfg.controller:
+            reason = f"donor controller {meta.get('controller')!r}"
+        elif meta and meta.get("space") != space.name:
+            reason = f"donor space {meta.get('space')!r}"
+        elif not hasattr(ctrl, "transfer_from"):
+            reason = f"{type(ctrl).__name__} does not transfer"
+        else:
+            try:
+                ctrl.transfer_from(ctrl_state)
+                applied = True
+            except (KeyError, ValueError) as e:
+                reason = str(e)
+    if tr is not None:
+        args = {"tag": tag, "donor": transfer.donor, "applied": applied}
+        if reason is not None:
+            args["fallback"] = reason
+        tr.complete("transfer_init", t0, args)
+    return transfer.donor if applied else None
+
+
 def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
            warm_has=None, scenario: Optional[Scenario] = None,
-           runtime=None, tag: str = "search") -> SearchResult:
+           runtime=None, tag: str = "search",
+           transfer: Optional[TransferSpec] = None) -> SearchResult:
     ctrl = CONTROLLERS[cfg.controller](space, seed=cfg.seed)
     if warm_has is not None and hasattr(ctrl, "warm_start"):
         ctrl.warm_start(*warm_has)
@@ -166,12 +240,15 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
     best_vec = None
     n = 0
     wall_base = 0.0
+    transferred_from: Optional[str] = None
+    resumed = False
     ck = getattr(runtime, "checkpoint", None) if runtime is not None else None
     every = max(int(getattr(runtime, "checkpoint_every", 1) or 1), 1)
     replay = False
     if ck is not None:
         state = ck.load(tag)
         if state is not None:
+            resumed = True
             meta = state["meta"]
             want = {"space": space.name, "controller": cfg.controller,
                     "seed": cfg.seed, "samples": cfg.samples,
@@ -189,6 +266,8 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
             best_vec = (None if state["best_vec"] is None
                         else np.asarray(state["best_vec"]))
             wall_base = state.get("wall_s", 0.0)
+            # resumed searches keep the provenance their first run recorded
+            transferred_from = state.get("transferred_from")
             # a COMPLETED checkpoint is a pure result cache: the controller
             # state is never consulted again, so skip restoring it — which
             # also lets finished searches from older sampler generations
@@ -197,10 +276,14 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
             replay = n >= cfg.samples
             if not replay:
                 ctrl.load_state(state["controller"])
+    if transfer is not None and not resumed:
+        # warm start only a FRESH search: a resume already has its own
+        # trajectory (transferring on top would diverge it)
+        transferred_from = _apply_transfer(ctrl, transfer, cfg, space, ck, tag)
     t0 = time.monotonic()
 
     def save():
-        ck.save(tag, {
+        state = {
             "meta": {"space": space.name, "controller": cfg.controller,
                      "seed": cfg.seed, "samples": cfg.samples,
                      "batch": cfg.batch,
@@ -211,7 +294,12 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
             "best_record": best,
             "best_vec": None if best_vec is None else np.asarray(best_vec),
             "wall_s": wall_base + time.monotonic() - t0,
-        })
+        }
+        # provenance only when warm: cold-path checkpoints stay
+        # bitwise-identical to builds without the transfer layer
+        if transferred_from is not None:
+            state["transferred_from"] = transferred_from
+        ck.save(tag, state)
 
     batches = 0
     # one span per driven search; try/finally so an interrupted (budget) or
@@ -257,11 +345,11 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
                 save()
     finally:
         if tr is not None:
-            tr.complete(
-                "search", t_span,
-                {"tag": tag, "samples": n,
-                 "scenario": None if scenario is None else scenario.name},
-            )
+            span_args = {"tag": tag, "samples": n,
+                         "scenario": None if scenario is None else scenario.name}
+            if transferred_from is not None:
+                span_args["transferred_from"] = transferred_from
+            tr.complete("search", t_span, span_args)
     if ck is not None and not replay:
         save()  # final state: doubles as the completed-search result cache
     # fall back to best-by-reward if nothing met the constraints
@@ -273,7 +361,8 @@ def _drive(space, engine: EvaluationEngine, cfg: SearchConfig,
             best = max(valid, key=lambda t: t[0]["reward"])[0]
     return SearchResult(best_vec, best, history, space,
                         wall_base + time.monotonic() - t0,
-                        engine.stats.as_dict())
+                        engine.stats.as_dict(),
+                        transferred_from=transferred_from)
 
 
 # ---------------------------------------------------------------------------
@@ -309,12 +398,13 @@ def joint_search(
     runtime=None,
     checkpoint_dir: Optional[str] = None,
     tag: str = "joint",
+    transfer: Optional[TransferSpec] = None,
 ) -> SearchResult:
     return _session(
         nas_space, acc_fn, has_space=has_space, engine=engine,
         predictor=predictor, backend=backend, runtime=runtime,
         checkpoint_dir=checkpoint_dir,
-    ).joint(rcfg=rcfg, scenario=scenario, cfg=cfg, tag=tag)
+    ).joint(rcfg=rcfg, scenario=scenario, cfg=cfg, tag=tag, transfer=transfer)
 
 
 def fixed_hw_search(
@@ -329,11 +419,13 @@ def fixed_hw_search(
     runtime=None,
     checkpoint_dir: Optional[str] = None,
     tag: str = "fixed_hw",
+    transfer: Optional[TransferSpec] = None,
 ) -> SearchResult:
     return _session(
         nas_space, acc_fn, engine=engine, backend=backend,
         runtime=runtime, checkpoint_dir=checkpoint_dir,
-    ).fixed_hw(rcfg=rcfg, scenario=scenario, h=h, cfg=cfg, tag=tag)
+    ).fixed_hw(rcfg=rcfg, scenario=scenario, h=h, cfg=cfg, tag=tag,
+               transfer=transfer)
 
 
 def phase_search(

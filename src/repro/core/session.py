@@ -124,9 +124,11 @@ class SearchSession:
         scenario: Optional[Scenario] = None,
         cfg: Optional[SearchConfig] = None,
         tag: str = "joint",
+        transfer: Optional[search_lib.TransferSpec] = None,
     ) -> SearchResult:
         """NAHAS multi-trial: one controller over the unified (NAS ++ HAS)
-        space (paper Sec. 3.5)."""
+        space (paper Sec. 3.5). ``transfer=`` warm-starts a fresh search
+        from a solved neighbor's checkpoint (``search.TransferSpec``)."""
         cfg = self._cfg(cfg)
         rcfg = search_lib._objective(rcfg, scenario)
         joint = concat(self.nas_space, self.has_space)
@@ -150,7 +152,7 @@ class SearchSession:
             warm = (self.nas_space.num_decisions, base, cfg.hot_start_logit)
         return search_lib._drive(
             joint, engine, cfg, warm_has=warm, scenario=scenario,
-            runtime=self.runtime, tag=tag,
+            runtime=self.runtime, tag=tag, transfer=transfer,
         )
 
     def fixed_hw(
@@ -160,6 +162,7 @@ class SearchSession:
         h=None,
         cfg: Optional[SearchConfig] = None,
         tag: str = "fixed_hw",
+        transfer: Optional[search_lib.TransferSpec] = None,
     ) -> SearchResult:
         """Platform-aware NAS baseline: HAS frozen (default: the baseline
         accelerator)."""
@@ -182,7 +185,7 @@ class SearchSession:
             )
         return search_lib._drive(
             self.nas_space, engine, cfg, scenario=scenario,
-            runtime=self.runtime, tag=tag,
+            runtime=self.runtime, tag=tag, transfer=transfer,
         )
 
     def phase(

@@ -30,12 +30,24 @@ batched controller sampling + fused updates, one ``CachedAccuracy.batch``
 pass per engine batch, columnar engine loop) — a quick 6-scenario sweep is
 simulator-bound rather than Python-dispatch-bound; see
 ``benchmarks/search_loop_bench.py`` / ``BENCH_search_loop.json``.
+
+Grid-scale sweeps (``scenarios.grid()``: hundreds of scenarios) add
+``SweepConfig(transfer=True)``: ``plan_transfer`` picks ~sqrt(N)
+feature-space medoids to run cold at the full budget, every other scenario
+warm-starts from its nearest medoid's converged controller state
+(``search.TransferSpec``) at ``transfer_budget()`` samples. Winners are
+selected off the global frontier either way, so the schedule changes no
+per-scenario best configs; ``benchmarks/transfer_bench.py`` measures the
+≥3x wall-clock amortization (``BENCH_transfer.json``).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Optional
+
+import numpy as np
 
 from repro.core import has as has_lib
 from repro.core import scenarios as scenarios_lib
@@ -47,6 +59,7 @@ from repro.core.scenarios import Scenario
 from repro.core.search import SearchConfig, SearchResult
 from repro.core.space import Space
 from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 DRIVERS = {
     "joint": search_lib.joint_search,
@@ -82,6 +95,24 @@ class SweepConfig:
     workers: int = 0
     processes: bool = False
     devices_per_worker: Optional[int] = None
+    # process mode: hold workers at a barrier until all are imported+ready
+    # and report the setup time as ExecutorReport.spawn_s
+    sync_start: bool = False
+    # scenario-transfer scheduling (plan_transfer): feature-space cluster
+    # medoids run first, cold, at the full budget; every other scenario then
+    # warm-starts from its nearest medoid's checkpoint at the reduced
+    # transfer budget. joint/fixed_hw drivers only.
+    transfer: bool = False
+    # samples for warm (transferred) searches; None = samples // 4, floored
+    # at one controller batch
+    transfer_samples: Optional[int] = None
+    # cold medoid count; None = ceil(sqrt(num_scenarios))
+    transfer_medoids: Optional[int] = None
+
+    def transfer_budget(self) -> int:
+        if self.transfer_samples is not None:
+            return self.transfer_samples
+        return max(self.search.batch, self.search.samples // 4)
 
 
 @dataclasses.dataclass
@@ -108,6 +139,7 @@ class ScenarioOutcome:
             "samples": len(self.result.history),
             "wall_s": self.result.wall_s,
             "engine_stats": self.result.engine_stats,
+            "transferred_from": self.result.transferred_from,
         }
 
 
@@ -117,6 +149,9 @@ class SweepResult:
     frontier: ParetoFrontier
     store_stats: Optional[dict]  # None when share_cache=False
     wall_s: float
+    # process-mode extra (sync_start): one-time worker spin-up wall clock,
+    # reported once per pool even when transfer runs multiple waves over it
+    spawn_s: Optional[float] = None
 
     @property
     def cross_scenario_hit_rate(self) -> float:
@@ -178,7 +213,81 @@ class SweepResult:
             "store_stats": self.store_stats,
             "cross_scenario_hit_rate": self.cross_scenario_hit_rate,
             "wall_s": self.wall_s,
+            "spawn_s": self.spawn_s,
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferPlan:
+    """Cold-first schedule over a scenario set: ``medoids`` (selection
+    order) run cold at the full budget; every other scenario warm-starts
+    from ``donors[name]``, its nearest medoid in feature space."""
+
+    medoids: tuple
+    donors: dict  # warm scenario name -> donor medoid name
+
+
+def plan_transfer(scenarios, k: Optional[int] = None) -> TransferPlan:
+    """Greedy farthest-point k-medoids over ``scenarios.features`` vectors
+    (k defaults to ceil(sqrt(n))): the first medoid is the most central
+    scenario, each next one the scenario farthest from every chosen medoid —
+    so the cold runs span the feature space and every warm scenario has a
+    nearby donor. Fully deterministic: features are pure functions of
+    scenario fields, and every arg-min/-max tie resolves to the lowest index
+    (first occurrence), independent of registration or dict order."""
+    scenarios = scenarios_lib.expand(scenarios)
+    n = len(scenarios)
+    if k is None:
+        k = max(1, math.ceil(math.sqrt(n)))
+    k = max(1, min(k, n))
+    with obs_trace.span("transfer_schedule", scenarios=n, medoids=k):
+        feats = np.stack([scenarios_lib.features(sc) for sc in scenarios])
+        dist = np.linalg.norm(feats[:, None, :] - feats[None, :, :], axis=-1)
+        chosen = [int(np.argmin(dist.sum(axis=1)))]
+        while len(chosen) < k:
+            nearest = dist[:, chosen].min(axis=1)
+            nearest[chosen] = -1.0  # never re-pick a medoid
+            chosen.append(int(np.argmax(nearest)))
+        donors = {}
+        for i, sc in enumerate(scenarios):
+            if i in chosen:
+                continue
+            j = chosen[int(np.argmin(dist[i, chosen]))]
+            donors[sc.name] = scenarios[j].name
+    return TransferPlan(
+        medoids=tuple(scenarios[i].name for i in chosen), donors=donors
+    )
+
+
+def _transfer_runtime(runtime):
+    """Transfer ships donor controller state through a ``Checkpointer``
+    (serial and process workers alike — the log-shipping layout). When the
+    caller's runtime has none, attach an ephemeral one; the returned cleanup
+    callable (else ``None``) removes it. The ephemeral checkpointer exists
+    only to carry donor state, not for durability, so periodic saves are
+    disabled (each search fsyncs once, at completion) — a caller-provided
+    checkpointer keeps its own cadence."""
+    if runtime is not None and getattr(runtime, "checkpoint", None) is not None:
+        return runtime, None
+    import shutil
+    import tempfile
+
+    from repro.runtime import Checkpointer, SearchRuntime  # deferred import
+
+    tmp = tempfile.mkdtemp(prefix="repro-transfer-ck-")
+    ck = Checkpointer(tmp)
+    no_periodic = 1 << 30
+    if runtime is None:
+        rt = SearchRuntime(checkpoint=ck, checkpoint_every=no_periodic)
+    else:
+        rt = SearchRuntime(
+            store=getattr(runtime, "store", None),
+            checkpoint=ck,
+            budget=getattr(runtime, "budget", None),
+            stop=getattr(runtime, "stop", None),
+            checkpoint_every=no_periodic,
+        )
+    return rt, (lambda: shutil.rmtree(tmp, ignore_errors=True))
 
 
 def assemble_result(
@@ -236,6 +345,11 @@ class SweepRunner:
                 f"unknown driver {self.cfg.driver!r} "
                 f"(one of {sorted(DRIVERS)})"
             )
+        if self.cfg.transfer and self.cfg.driver not in ("joint", "fixed_hw"):
+            raise ValueError(
+                f"transfer warm-starts a single controller and only the "
+                f"joint/fixed_hw drivers have one, not {self.cfg.driver!r}"
+            )
         if has_space is not None and self.cfg.driver != "joint":
             # fixed_hw/phase/nested build their own accelerator side and
             # would silently ignore a custom space
@@ -276,28 +390,85 @@ class SweepRunner:
         driver = DRIVERS[cfg.driver]
         scfg = dataclasses.replace(cfg.search, store=store)
         t0 = time.monotonic()
-        results: list[tuple[Scenario, SearchResult]] = []
-        for sc in self.scenarios:
+        order = list(self.scenarios)
+        specs: dict[str, search_lib.TransferSpec] = {}
+        warm_cfg = scfg
+        warm_runtime = runtime
+        cleanup = None
+        plan = None
+        if cfg.transfer and len(self.scenarios) > 1:
+            caller_runtime = runtime
+            runtime, cleanup = _transfer_runtime(runtime)
+            plan = plan_transfer(self.scenarios, k=cfg.transfer_medoids)
+            by_name = {sc.name: sc for sc in self.scenarios}
+            # medoids first (cold, full budget) so every warm scenario's
+            # donor checkpoint exists by the time it runs
+            order = [by_name[m] for m in plan.medoids] + [
+                sc for sc in self.scenarios if sc.name in plan.donors
+            ]
+            specs = {
+                name: search_lib.TransferSpec(donor=donor, donor_tag=f"sweep.{donor}")
+                for name, donor in plan.donors.items()
+            }
+            warm_cfg = dataclasses.replace(scfg, samples=cfg.transfer_budget())
+            # the ephemeral checkpointer exists only so medoids can donate:
+            # warm searches then take the donor state inline and run under
+            # the caller's own runtime — zero checkpoint writes on the warm
+            # fan-out (a caller-provided checkpointer keeps full durability)
+            warm_runtime = runtime if cleanup is None else caller_runtime
             if verbose:
                 print(
-                    f"[sweep] {sc.name}: {sc.describe()} "
-                    f"({cfg.driver}, {scfg.samples} samples)",
+                    f"[sweep] transfer: {len(plan.medoids)} medoids cold "
+                    f"({scfg.samples} samples), {len(plan.donors)} warm "
+                    f"({warm_cfg.samples} samples)",
                     flush=True,
                 )
-            kw = dict(
-                cfg=scfg,
-                backend=cfg.backend,
-                scenario=sc,
-                runtime=runtime,
-                tag=f"sweep.{sc.name}",
-            )
-            if cfg.driver == "joint":
-                res = driver(
-                    self.nas_space, self.acc_fn, has_space=self.has_space, **kw
+        try:
+            by_result: dict[str, SearchResult] = {}
+            donor_states: dict[str, dict] = {}
+            for sc in order:
+                spec = specs.get(sc.name)
+                run_cfg = scfg if spec is None else warm_cfg
+                run_runtime = runtime if spec is None else warm_runtime
+                if spec is not None and cleanup is not None:
+                    # inline the donor state (loaded once per medoid) so the
+                    # warm search never touches the ephemeral checkpointer
+                    if spec.donor not in donor_states:
+                        donor_states[spec.donor] = runtime.checkpoint.load(
+                            spec.donor_tag
+                        )
+                    spec = search_lib.TransferSpec(
+                        donor=spec.donor, state=donor_states[spec.donor]
+                    )
+                if verbose:
+                    warm = "" if spec is None else f" <- {spec.donor}"
+                    print(
+                        f"[sweep] {sc.name}: {sc.describe()} "
+                        f"({cfg.driver}, {run_cfg.samples} samples){warm}",
+                        flush=True,
+                    )
+                kw = dict(
+                    cfg=run_cfg,
+                    backend=cfg.backend,
+                    scenario=sc,
+                    runtime=run_runtime,
+                    tag=f"sweep.{sc.name}",
                 )
-            else:
-                res = driver(self.nas_space, self.acc_fn, **kw)
-            results.append((sc, res))
+                if spec is not None:
+                    kw["transfer"] = spec
+                if cfg.driver == "joint":
+                    res = driver(
+                        self.nas_space, self.acc_fn, has_space=self.has_space, **kw
+                    )
+                else:
+                    res = driver(self.nas_space, self.acc_fn, **kw)
+                by_result[sc.name] = res
+        finally:
+            if cleanup is not None:
+                cleanup()
+        results: list[tuple[Scenario, SearchResult]] = [
+            (sc, by_result[sc.name]) for sc in self.scenarios
+        ]
         return assemble_result(
             results,
             objectives=cfg.objectives,
@@ -318,6 +489,7 @@ class SweepRunner:
 
         cfg = self.cfg
         runtime = search_lib._as_runtime(runtime, cfg.checkpoint_dir)
+        do_transfer = cfg.transfer and len(self.scenarios) > 1
         store = cfg.search.store
         if store is None and runtime is not None:
             store = getattr(runtime, "store", None)
@@ -327,6 +499,9 @@ class SweepRunner:
             # caches (values are identical either way, sharing only skips
             # re-simulation)
             store = RecordStore()
+        cleanup = None
+        if do_transfer:
+            runtime, cleanup = _transfer_runtime(runtime)
         ex = SearchExecutor(
             store=store,
             checkpoint=None if runtime is None else runtime.checkpoint,
@@ -336,46 +511,115 @@ class SweepRunner:
             objectives=cfg.objectives,
             processes=cfg.processes,
             devices_per_worker=cfg.devices_per_worker,
+            sync_start=cfg.sync_start,
+            # transfer runs two waves (cold medoids, then the warm fan-out)
+            # against one spawned fleet: warm donor checkpoints ship through
+            # the shared Checkpointer, not a worker respawn
+            persistent=do_transfer and cfg.processes,
         )
+
+        def check(report) -> None:
+            for name, err in report.errors.items():
+                raise RuntimeError(f"search {name} failed") from err
+            interrupted = report.interrupted
+            if interrupted:
+                err = report.outcomes[interrupted[0]].error
+                if isinstance(err, search_lib.SearchInterrupted):
+                    raise err
+                raise search_lib.SearchInterrupted(
+                    interrupted[0], 0, cfg.search.samples
+                ) from err
+
         t0 = time.monotonic()
         # the executor's runtime carries the store; jobs must not also pin it
         # (an in-memory store inside job kwargs would not survive pickling)
-        jobs = scenario_jobs(
-            self.scenarios,
-            self.nas_space,
-            self.acc_fn,
-            dataclasses.replace(cfg.search, store=None),
-            driver=cfg.driver,
-            backend=cfg.backend,
-        )
-        if verbose:
-            mode = "processes" if cfg.processes else "threads"
-            print(
-                f"[sweep] {len(jobs)} scenarios on {cfg.workers} {mode} "
-                f"({cfg.driver}, {cfg.search.samples} samples each)",
-                flush=True,
-            )
-        report = ex.run(jobs)
-        for name, err in report.errors.items():
-            raise RuntimeError(f"search {name} failed") from err
-        interrupted = report.interrupted
-        if interrupted:
-            err = report.outcomes[interrupted[0]].error
-            if isinstance(err, search_lib.SearchInterrupted):
-                raise err
-            raise search_lib.SearchInterrupted(
-                interrupted[0], 0, cfg.search.samples
-            ) from err
-        results = [
-            (sc, report.outcomes[f"sweep.{sc.name}"].result)
-            for sc in self.scenarios
-        ]
-        return assemble_result(
+        base_cfg = dataclasses.replace(cfg.search, store=None)
+        mode = "processes" if cfg.processes else "threads"
+        try:
+            if do_transfer:
+                plan = plan_transfer(self.scenarios, k=cfg.transfer_medoids)
+                medoid_set = set(plan.medoids)
+                cold = [sc for sc in self.scenarios if sc.name in medoid_set]
+                warm = [sc for sc in self.scenarios if sc.name not in medoid_set]
+                specs = {
+                    sc.name: search_lib.TransferSpec(
+                        donor=plan.donors[sc.name],
+                        donor_tag=f"sweep.{plan.donors[sc.name]}",
+                    )
+                    for sc in warm
+                }
+                warm_cfg = dataclasses.replace(base_cfg, samples=cfg.transfer_budget())
+                if verbose:
+                    print(
+                        f"[sweep] transfer: {len(cold)} medoids cold "
+                        f"({base_cfg.samples} samples) then {len(warm)} warm "
+                        f"({warm_cfg.samples} samples) on {cfg.workers} "
+                        f"{mode}",
+                        flush=True,
+                    )
+                jobs = scenario_jobs(
+                    cold,
+                    self.nas_space,
+                    self.acc_fn,
+                    base_cfg,
+                    driver=cfg.driver,
+                    backend=cfg.backend,
+                )
+                report = ex.run(jobs)
+                check(report)
+                outcomes = dict(report.outcomes)
+                spawn_s = report.spawn_s
+                store_stats = report.store_stats
+                if warm:
+                    jobs = scenario_jobs(
+                        warm,
+                        self.nas_space,
+                        self.acc_fn,
+                        warm_cfg,
+                        driver=cfg.driver,
+                        backend=cfg.backend,
+                        transfer_specs=specs,
+                    )
+                    report = ex.run(jobs)
+                    check(report)
+                    outcomes.update(report.outcomes)
+                    # cumulative counters: the warm wave's snapshot already
+                    # folds the cold wave's work (same pool, same segments)
+                    store_stats = report.store_stats
+            else:
+                jobs = scenario_jobs(
+                    self.scenarios,
+                    self.nas_space,
+                    self.acc_fn,
+                    base_cfg,
+                    driver=cfg.driver,
+                    backend=cfg.backend,
+                )
+                if verbose:
+                    print(
+                        f"[sweep] {len(jobs)} scenarios on {cfg.workers} "
+                        f"{mode} ({cfg.driver}, {cfg.search.samples} samples "
+                        f"each)",
+                        flush=True,
+                    )
+                report = ex.run(jobs)
+                check(report)
+                outcomes = dict(report.outcomes)
+                spawn_s = report.spawn_s
+                store_stats = report.store_stats
+        finally:
+            ex.close()
+            if cleanup is not None:
+                cleanup()
+        results = [(sc, outcomes[f"sweep.{sc.name}"].result) for sc in self.scenarios]
+        out = assemble_result(
             results,
             objectives=cfg.objectives,
-            store_stats=report.store_stats,
+            store_stats=store_stats,
             wall_s=time.monotonic() - t0,
         )
+        out.spawn_s = spawn_s
+        return out
 
 
 def run_sweep(

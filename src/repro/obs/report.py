@@ -124,6 +124,13 @@ def build_report(trace_dir: Union[str, Path], top: int = 12) -> dict:
     spans: dict[str, dict] = {}
     workers: dict[int, dict] = {}
     scenarios: dict[str, dict] = {}
+    # warm-vs-cold attribution for transfer sweeps: "search" spans carry the
+    # scenario + transferred_from provenance, transfer_init/donor_load/
+    # transfer_schedule are the warm-start overhead itself
+    searches: dict[str, dict] = {}
+    overhead = {"transfer_init_us": 0.0, "donor_load_us": 0.0,
+                "schedule_us": 0.0}
+    saw_transfer = False
     t_end = 0.0
     for ev in events:
         if ev.get("ph") != "X":
@@ -152,6 +159,26 @@ def build_report(trace_dir: Union[str, Path], top: int = 12) -> dict:
             sc = scenarios.setdefault(label, {"batches": 0, "evaluations": 0})
             sc["batches"] += 1
             sc["evaluations"] += int(args.get("n", 0))
+        elif name == "search":
+            args = ev.get("args", {})
+            label = str(args.get("scenario") or args.get("tag") or "-")
+            s = searches.setdefault(
+                label, {"search_us": 0.0, "samples": 0, "donor": None}
+            )
+            s["search_us"] += dur
+            s["samples"] = max(s["samples"], int(args.get("samples", 0)))
+            if args.get("transferred_from"):
+                s["donor"] = str(args["transferred_from"])
+                saw_transfer = True
+        elif name == "transfer_init":
+            overhead["transfer_init_us"] += dur
+            saw_transfer = True
+        elif name == "donor_load":
+            overhead["donor_load_us"] += dur
+            saw_transfer = True
+        elif name == "transfer_schedule":
+            overhead["schedule_us"] += dur
+            saw_transfer = True
 
     for agg in spans.values():
         agg["mean_us"] = agg["total_us"] / max(agg["count"], 1)
@@ -168,6 +195,18 @@ def build_report(trace_dir: Union[str, Path], top: int = 12) -> dict:
         with open(mpath, "r", encoding="utf-8") as f:
             metrics = json.load(f)
 
+    transfer = None
+    if saw_transfer:
+        warm = {k: v for k, v in searches.items() if v["donor"]}
+        cold = {k: v for k, v in searches.items() if not v["donor"]}
+        transfer = {
+            "warm": warm,
+            "cold": cold,
+            "warm_us": sum(v["search_us"] for v in warm.values()),
+            "cold_us": sum(v["search_us"] for v in cold.values()),
+            **overhead,
+        }
+
     top_spans = sorted(
         spans.items(), key=lambda kv: kv[1]["total_us"], reverse=True
     )[:top]
@@ -178,6 +217,7 @@ def build_report(trace_dir: Union[str, Path], top: int = 12) -> dict:
         "spans": dict(top_spans),
         "workers": {str(k): v for k, v in sorted(workers.items())},
         "scenarios": scenarios,
+        "transfer": transfer,
         "metrics": metrics,
     }
 
@@ -217,6 +257,30 @@ def render_report(rep: dict) -> str:
             out.append(
                 f"  {label:<18} evaluations={sc['evaluations']:<7} "
                 f"batches={sc['batches']}"
+            )
+    transfer = rep.get("transfer")
+    if transfer:
+        out += [
+            "",
+            f"scenario transfer: {len(transfer['cold'])} cold "
+            f"({_fmt_us(transfer['cold_us'])} search) / "
+            f"{len(transfer['warm'])} warm "
+            f"({_fmt_us(transfer['warm_us'])} search); overhead "
+            f"schedule={_fmt_us(transfer['schedule_us'])} "
+            f"donor_load={_fmt_us(transfer['donor_load_us'])} "
+            f"init={_fmt_us(transfer['transfer_init_us'])}",
+        ]
+        for label, s in sorted(transfer["warm"].items()):
+            out.append(
+                f"  {label:<28} warm <- {s['donor']:<24} "
+                f"search={_fmt_us(s['search_us']):<9} "
+                f"samples={s['samples']}"
+            )
+        for label, s in sorted(transfer["cold"].items()):
+            out.append(
+                f"  {label:<28} cold{'':<31} "
+                f"search={_fmt_us(s['search_us']):<9} "
+                f"samples={s['samples']}"
             )
     metrics = rep.get("metrics")
     if metrics:

@@ -131,6 +131,7 @@ def result_state(result: SearchResult) -> dict:
         "space": result.space.name,
         "wall_s": result.wall_s,
         "engine_stats": result.engine_stats,
+        "transferred_from": result.transferred_from,
     }
 
 
@@ -147,4 +148,6 @@ def result_from_state(state: dict, space) -> SearchResult:
         space=space,
         wall_s=state["wall_s"],
         engine_stats=state["engine_stats"],
+        # .get: snapshots written before the transfer layer have no key
+        transferred_from=state.get("transferred_from"),
     )

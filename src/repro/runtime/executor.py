@@ -300,7 +300,7 @@ def _partial_segment_stats(path: Path, offset: int) -> dict:
 
 def _process_worker(
     worker_id: int,
-    payload: bytes,
+    in_q,
     store_path,
     checkpoint_root,
     checkpoint_every: int,
@@ -309,14 +309,20 @@ def _process_worker(
     go_event,
     out_q,
 ) -> None:
-    """Worker main: run this shard's jobs serially, append evaluations to our
-    own store segment, ship each outcome as it completes. Spawned (not
-    forked): jax state is never shared with the parent, and XLA_FLAGS set by
-    the parent before start() are honored on this process's first jax
-    import."""
+    """Worker main: a persistent wave loop. The worker sets up once (jax
+    import, store segment, checkpointer), then serves pickled job shards off
+    its input queue — one ``(wave) payload`` per ``SearchExecutor.run()``
+    call — until the ``None`` sentinel. Reusing the process across waves is
+    what amortizes the multi-second spawn cost over a whole grid sweep.
+
+    Spawned (not forked): jax state is never shared with the parent, and
+    XLA_FLAGS set by the parent before start() are honored on this process's
+    first jax import. After each wave the worker ships its *cumulative*
+    store counters (``wave_end``); the parent keeps the latest snapshot per
+    worker, which aligns with the crash path (segment lines are counted from
+    the pool-spawn offset)."""
     t_spawn = time.monotonic_ns()  # worker-main entry: the spawn span start
     try:
-        jobs: list[SearchJob] = pickle.loads(payload)
         # trace enablement crosses the spawn boundary as an env var (like
         # XLA_FLAGS); the tracer must exist before the store is built so
         # per-namespace accounting turns on with it
@@ -346,39 +352,71 @@ def _process_worker(
         if tracer is not None:
             # import + store rehydration + (sync_start) barrier wait — the
             # phase a merged trace shows before the per-job steady state
-            tracer.complete_since_ns("worker_spawn", t_spawn, {"jobs": len(jobs)})
-        for job in jobs:
-            with obs_trace.span("job", job=job.name):
-                try:
-                    res = job.fn(**job.kwargs, runtime=runtime, tag=job.name)
-                    out_q.put(("done", job.name, result_state(res)))
-                except SearchInterrupted as e:
-                    out_q.put(
-                        (
-                            "interrupted",
-                            job.name,
-                            {
-                                "tag": e.tag,
-                                "samples_done": e.samples_done,
-                                "samples": e.samples,
-                            },
+            tracer.complete_since_ns("worker_spawn", t_spawn, {})
+        while True:
+            payload = in_q.get()
+            if payload is None:  # shutdown sentinel
+                break
+            jobs: list[SearchJob] = pickle.loads(payload)
+            for job in jobs:
+                with obs_trace.span("job", job=job.name):
+                    try:
+                        res = job.fn(**job.kwargs, runtime=runtime, tag=job.name)
+                        out_q.put(("done", job.name, result_state(res)))
+                    except SearchInterrupted as e:
+                        out_q.put(
+                            (
+                                "interrupted",
+                                job.name,
+                                {
+                                    "tag": e.tag,
+                                    "samples_done": e.samples_done,
+                                    "samples": e.samples,
+                                },
+                            )
                         )
-                    )
-                except Exception as e:  # noqa: BLE001 - isolate siblings
-                    out_q.put(("error", job.name, _ship_error(e)))
-            if tracer is not None:
-                tracer.flush()  # a later hard kill keeps finished-job spans
-        stats = None
+                    except Exception as e:  # noqa: BLE001 - isolate siblings
+                        out_q.put(("error", job.name, _ship_error(e)))
+                if tracer is not None:
+                    tracer.flush()  # a later hard kill keeps finished-job spans
+            stats = None
+            if store is not None:
+                store.flush()
+                stats = dict(store.stats.as_dict())
+                stats["appended"] = store.appended
+            out_q.put(("wave_end", worker_id, stats))
         if store is not None:
-            store.flush()
-            stats = dict(store.stats.as_dict())
-            stats["appended"] = store.appended
             store.close()
-        out_q.put(("exit", worker_id, stats))
+        out_q.put(("exit", worker_id, None))
     except BaseException as e:  # noqa: BLE001 - ship, don't die silently
         out_q.put(("fatal", worker_id, _ship_error(e)))
     finally:
         obs_trace.stop()
+
+
+@dataclasses.dataclass
+class _ProcessPool:
+    """A spawned worker fleet kept alive across ``run()`` waves."""
+
+    procs: list
+    in_qs: list
+    out_q: object
+    stop_event: object
+    go_event: object  # None unless sync_start
+    budget_spec: Optional[dict]
+    store_path: Optional[Path]
+    k: int
+    t_spawn: float  # monotonic at spawn
+    # pre-spawn segment sizes: crash reconstruction counts complete lines
+    # appended past these offsets (cumulative, like the shipped counters)
+    seg_offsets: dict[int, int] = dataclasses.field(default_factory=dict)
+    # latest cumulative store counters per worker (wave_end snapshots)
+    worker_stats: dict[int, Optional[dict]] = dataclasses.field(
+        default_factory=dict
+    )
+    ready: set[int] = dataclasses.field(default_factory=set)
+    spawn_s: Optional[float] = None
+    broken: bool = False  # a worker died/fataled: respawn before reuse
 
 
 class SearchExecutor:
@@ -397,10 +435,20 @@ class SearchExecutor:
         processes: bool = False,
         devices_per_worker: Optional[int] = None,
         sync_start: bool = False,
+        persistent: bool = False,
     ):
         self.max_workers = max_workers
         self.objectives = objectives
         self.processes = processes
+        # keep the spawned worker pool alive across run() calls: follow-up
+        # waves (e.g. the transfer scheduler's warm fan-out) reuse the
+        # already-imported workers instead of paying the multi-second spawn
+        # again. The pool is sized max_workers regardless of the first
+        # wave's job count; call close() (or use the executor as a context
+        # manager) when done. Default off: one-shot runs then tear the
+        # workers down on return, exactly as before.
+        self.persistent = persistent
+        self._pool: Optional[_ProcessPool] = None
         # XLA_FLAGS=--xla_force_host_platform_device_count=N for each worker
         # (simulated multi-device; workers import jax fresh, so the flag is
         # honored even though the parent's jax is already initialized)
@@ -423,6 +471,44 @@ class SearchExecutor:
         boundary and report ``interrupted`` (process workers see the mirrored
         event)."""
         self.stop_token.set(reason)
+
+    def close(self) -> None:
+        """Shut down the process-worker pool: send each worker its shutdown
+        sentinel, drain the result queue (a worker's put must never block on
+        a full pipe while the parent joins), join, and terminate stragglers.
+        Safe to call repeatedly; a no-op in thread mode or when no pool is
+        live. Non-persistent executors call this automatically at the end of
+        every ``run()``."""
+        pool, self._pool = self._pool, None
+        if pool is None:
+            return
+        for q in pool.in_qs:
+            try:
+                q.put(None)
+            except Exception:  # noqa: BLE001 - queue may be broken post-crash
+                pass
+        if pool.go_event is not None:
+            pool.go_event.set()  # never leave a worker parked at the barrier
+        deadline = time.monotonic() + 30.0
+        while any(p.is_alive() for p in pool.procs):
+            if time.monotonic() > deadline:
+                break
+            try:
+                pool.out_q.get(timeout=0.1)
+            except queue_lib.Empty:
+                pass
+        for p in pool.procs:
+            p.join(timeout=5.0)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+        self.stop_token.unmirror(pool.stop_event)
+
+    def __enter__(self) -> "SearchExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def run(self, jobs: list[SearchJob]) -> ExecutorReport:
         """Execute all jobs (at most ``max_workers`` at a time); never
@@ -486,17 +572,15 @@ class SearchExecutor:
         """Deterministic round-robin partition: job i -> worker i % k."""
         return [jobs[i::k] for i in range(k)]
 
-    def _run_processes(self, jobs: list[SearchJob]) -> ExecutorReport:
-        t0 = time.monotonic()
-        parent_tracer = obs_trace.active()
-        t_trace = parent_tracer.now() if parent_tracer is not None else 0.0
+    def _spawn_pool(self, k: int, store_path: Optional[Path]) -> _ProcessPool:
+        """Spawn ``k`` persistent workers (queues, events, shared budget,
+        env handoff) — everything that used to happen per ``run()`` now
+        happens once per pool."""
         runtime = self.runtime
-        store_path = self._store_path()
-        k = max(1, min(self.max_workers, len(jobs)))
-        shards = self._shard(jobs, k)
+        t_spawn = time.monotonic()
         # pre-spawn segment sizes: if a worker dies before shipping its
         # counters, the complete lines it appended past this offset are the
-        # durable record of the work it did (folded into the aggregate below)
+        # durable record of the work it did (folded into the aggregate)
         seg_offsets: dict[int, int] = {}
         if store_path is not None:
             for wid in range(k):
@@ -505,20 +589,9 @@ class SearchExecutor:
                     seg_offsets[wid] = seg.stat().st_size
                 except FileNotFoundError:
                     seg_offsets[wid] = 0
-        payloads = []
-        for wid, shard in enumerate(shards):
-            try:
-                payloads.append(pickle.dumps(shard))
-            except Exception as e:
-                raise ValueError(
-                    f"process mode ships jobs by pickle and worker {wid}'s "
-                    f"shard does not serialize ({e}); use registry spaces "
-                    f"(repro.core.nas.SPACES / has.has_space — they carry "
-                    f"pickle provenance) and a picklable backend, or run "
-                    f"thread mode (processes=False)"
-                ) from e
         ctx = multiprocessing.get_context("spawn")  # never fork jax state
         out_q = ctx.Queue()
+        in_qs = [ctx.Queue() for _ in range(k)]
         stop_event = ctx.Event()
         self.stop_token.mirror(stop_event)
         go_event = ctx.Event() if self.sync_start else None
@@ -539,6 +612,7 @@ class SearchExecutor:
         checkpoint_root = (
             None if runtime.checkpoint is None else str(runtime.checkpoint.root)
         )
+        parent_tracer = obs_trace.active()
         saved_flags = os.environ.get("XLA_FLAGS")
         if self.devices_per_worker:
             flag = (
@@ -553,12 +627,12 @@ class SearchExecutor:
             os.environ[obs_trace.TRACE_DIR_ENV] = str(parent_tracer.dir)
         procs: list = []
         try:
-            for wid, payload in enumerate(payloads):
+            for wid in range(k):
                 p = ctx.Process(
                     target=_process_worker,
                     args=(
                         wid,
-                        payload,
+                        in_qs[wid],
                         store_path,
                         checkpoint_root,
                         runtime.checkpoint_every,
@@ -582,17 +656,72 @@ class SearchExecutor:
                     os.environ.pop(obs_trace.TRACE_DIR_ENV, None)
                 else:
                     os.environ[obs_trace.TRACE_DIR_ENV] = saved_trace
+        return _ProcessPool(
+            procs=procs,
+            in_qs=in_qs,
+            out_q=out_q,
+            stop_event=stop_event,
+            go_event=go_event,
+            budget_spec=budget_spec,
+            store_path=store_path,
+            k=k,
+            t_spawn=t_spawn,
+            seg_offsets=seg_offsets,
+        )
+
+    def _ensure_pool(self, n_jobs: int, store_path: Optional[Path]) -> tuple:
+        """The live pool, respawning after a crash; returns (pool, spawned).
+        Persistent pools are sized ``max_workers`` up front (later waves may
+        be wider than the first); one-shot pools shrink to the job count."""
+        pool = self._pool
+        if pool is not None and (
+            pool.broken or any(not p.is_alive() for p in pool.procs)
+        ):
+            self.close()
+            pool = None
+        if pool is not None:
+            return pool, False
+        if self.persistent:
+            k = max(1, self.max_workers)
+        else:
+            k = max(1, min(self.max_workers, n_jobs))
+        pool = self._spawn_pool(k, store_path)
+        self._pool = pool
+        return pool, True
+
+    def _run_processes(self, jobs: list[SearchJob]) -> ExecutorReport:
+        t0 = time.monotonic()
+        parent_tracer = obs_trace.active()
+        t_trace = parent_tracer.now() if parent_tracer is not None else 0.0
+        runtime = self.runtime
+        store_path = self._store_path()
+        pool, spawned = self._ensure_pool(len(jobs), store_path)
+        shards = self._shard(jobs, pool.k)
+        payloads = []
+        for wid, shard in enumerate(shards):
+            try:
+                payloads.append(pickle.dumps(shard))
+            except Exception as e:
+                raise ValueError(
+                    f"process mode ships jobs by pickle and worker {wid}'s "
+                    f"shard does not serialize ({e}); use registry spaces "
+                    f"(repro.core.nas.SPACES / has.has_space — they carry "
+                    f"pickle provenance) and a picklable backend, or run "
+                    f"thread mode (processes=False)"
+                ) from e
+        for wid, payload in enumerate(payloads):
+            pool.in_qs[wid].put(payload)
 
         outcomes: dict[str, JobOutcome] = {}
-        worker_stats: dict[int, Optional[dict]] = {}
         fatals: dict[int, dict] = {}
-        ready: set[int] = set()
-        spawn_s: Optional[float] = None
+        # every worker must account for its wave shard (empty shards get an
+        # immediate wave_end) — the wave is over when none are pending
+        pending: set[int] = set(range(pool.k))
+        crashed: set[int] = set()
 
         def handle(kind: str, who, payload) -> None:
-            nonlocal spawn_s
             if kind == "ready":
-                ready.add(who)
+                pool.ready.add(who)
             elif kind == "done":
                 outcomes[who] = JobOutcome(
                     who, "done", result=result_from_state(payload, None)
@@ -611,45 +740,55 @@ class SearchExecutor:
                     "error",
                     error=WorkerError(f"{payload['repr']}\n{payload['traceback']}"),
                 )
-            elif kind == "exit":
-                worker_stats[who] = payload
+            elif kind == "wave_end":
+                pool.worker_stats[who] = payload
+                pending.discard(who)
             elif kind == "fatal":
                 fatals[who] = payload
+                pending.discard(who)  # its main loop is gone; no wave_end
 
-        # drain while workers run: a worker's queue put must never block on a
-        # full pipe because the parent is waiting in join()
-        while True:
-            alive = [p for p in procs if p.is_alive()]
+        # drain while the wave runs: a worker's queue put must never block on
+        # a full pipe because the parent is waiting for the wave to end
+        while pending:
+            go_event = pool.go_event
             if go_event is not None and not go_event.is_set():
-                if spawn_s is None and len(ready) >= len(procs):
-                    spawn_s = time.monotonic() - t0
+                if pool.spawn_s is None and len(pool.ready) >= pool.k:
+                    pool.spawn_s = time.monotonic() - pool.t_spawn
                     if parent_tracer is not None:
                         parent_tracer.complete(
-                            "spawn_barrier", t_trace, {"workers": len(procs)}
+                            "spawn_barrier", t_trace, {"workers": pool.k}
                         )
                     go_event.set()
-                elif not alive:
+                elif not any(p.is_alive() for p in pool.procs):
                     go_event.set()  # never gate survivors on a dead worker
             try:
-                handle(*out_q.get(timeout=0.1))
+                handle(*pool.out_q.get(timeout=0.1))
+                continue
             except queue_lib.Empty:
-                if not alive:
-                    break
-        while True:  # residual messages buffered after the last worker exited
-            try:
-                handle(*out_q.get(timeout=0.2))
-            except queue_lib.Empty:
-                break
-        for p in procs:
-            p.join()
-        self.stop_token.unmirror(stop_event)
+                pass
+            for wid in sorted(pending):
+                if not pool.procs[wid].is_alive():
+                    # drain anything the worker flushed before dying (its
+                    # wave_end may still be buffered in the pipe)
+                    while True:
+                        try:
+                            handle(*pool.out_q.get(timeout=0.2))
+                        except queue_lib.Empty:
+                            break
+                    if wid in pending:
+                        pending.discard(wid)
+                        crashed.add(wid)
+        if crashed or fatals:
+            pool.broken = True  # next run() respawns a clean fleet
+        spawn_s = pool.spawn_s if spawned else None
 
         # sync shared-budget consumption back into the parent's Budget so the
         # caller's accounting (e.g. CLI summaries) reflects worker admissions
-        if budget is not None and budget_spec is not None:
+        budget = runtime.budget
+        if budget is not None and pool.budget_spec is not None:
             with budget._lock:
-                budget._granted = int(budget_spec["granted"].value)
-                budget.exhausted = bool(budget_spec["exhausted"].value)
+                budget._granted = int(pool.budget_spec["granted"].value)
+                budget.exhausted = bool(pool.budget_spec["exhausted"].value)
 
         shard_of = {job.name: wid for wid, shard in enumerate(shards) for job in shard}
         for wid, shard in enumerate(shards):
@@ -669,7 +808,8 @@ class SearchExecutor:
                         job.name,
                         "interrupted",
                         error=WorkerCrashed(
-                            f"worker {wid} exited (code {procs[wid].exitcode}) "
+                            f"worker {wid} exited "
+                            f"(code {pool.procs[wid].exitcode}) "
                             f"before finishing {job.name!r}; its checkpoints "
                             f"and store segment survive — re-run to resume"
                         ),
@@ -686,26 +826,31 @@ class SearchExecutor:
         if store is not None:
             store.refresh()  # log shipping: fold worker segments into memory
             store.flush()
-            # a worker that died before its "exit" message never shipped its
-            # counters, but the complete lines it appended to its segment are
-            # durable — reconstruct a partial stats record from them so the
-            # aggregate reflects work every worker paid for
-            partials = [
-                _partial_segment_stats(
-                    store_path.with_name(f"{store_path.name}{_SEGMENT_INFIX}{wid}"),
-                    seg_offsets.get(wid, 0),
-                )
-                for wid in range(k)
-                if wid not in worker_stats
-            ]
-            store_stats = self._aggregate_stats(
-                [s for s in worker_stats.values() if s is not None] + partials
-            )
+            # counters are cumulative since pool spawn: take each worker's
+            # latest wave_end snapshot; for a worker that died (its memory
+            # counters are gone) count the complete lines it durably appended
+            # past the spawn offset instead, tagged partial_workers
+            stats_list = []
+            for wid in range(pool.k):
+                dead = wid in crashed or wid in fatals
+                snap = pool.worker_stats.get(wid)
+                if not dead and snap is not None:
+                    stats_list.append(snap)
+                elif dead or snap is None:
+                    stats_list.append(
+                        _partial_segment_stats(
+                            store_path.with_name(
+                                f"{store_path.name}{_SEGMENT_INFIX}{wid}"
+                            ),
+                            pool.seg_offsets.get(wid, 0),
+                        )
+                    )
+            store_stats = self._aggregate_stats(stats_list)
         if parent_tracer is not None:
             parent_tracer.complete(
-                "executor_run", t_trace, {"jobs": len(jobs), "workers": k}
+                "executor_run", t_trace, {"jobs": len(jobs), "workers": pool.k}
             )
-        return ExecutorReport(
+        report = ExecutorReport(
             outcomes={name: outcomes[name] for name in (j.name for j in jobs)},
             frontier=frontier,
             store_stats=store_stats,
@@ -713,6 +858,9 @@ class SearchExecutor:
             spawn_s=spawn_s,
             shards=shard_of,
         )
+        if not self.persistent:
+            self.close()
+        return report
 
     @staticmethod
     def _aggregate_stats(stats: list[dict]) -> dict:
@@ -745,11 +893,14 @@ def scenario_jobs(
     cfg=None,
     driver: str = "joint",
     backend=None,
+    transfer_specs=None,
 ) -> list[SearchJob]:
     """One ``SearchJob`` per scenario over one driver — the concurrent
     counterpart of ``sweep.SweepRunner`` (same tags, so the two are
     checkpoint-compatible: a sweep interrupted serially can resume under the
-    executor and vice versa)."""
+    executor and vice versa). ``transfer_specs`` maps scenario name ->
+    ``search.TransferSpec`` for scenarios that should warm-start from a
+    solved neighbor's checkpoint (joint/fixed_hw drivers only)."""
     from repro.core import scenarios as scenarios_lib
     from repro.core import sweep as sweep_lib
     from repro.core.proxy import CachedAccuracy
@@ -759,20 +910,32 @@ def scenario_jobs(
         raise ValueError(
             f"unknown driver {driver!r} (one of {sorted(sweep_lib.DRIVERS)})"
         )
+    if transfer_specs and driver not in ("joint", "fixed_hw"):
+        raise ValueError(
+            f"transfer_specs warm-starts a single controller and only the "
+            f"joint/fixed_hw drivers have one; driver {driver!r} does not "
+            f"support transfer"
+        )
     if not isinstance(acc_fn, CachedAccuracy):
         acc_fn = CachedAccuracy(acc_fn)
     cfg = cfg or SearchConfig()
-    return [
-        SearchJob(
-            name=f"sweep.{sc.name}",
-            fn=sweep_lib.DRIVERS[driver],
-            kwargs=dict(
-                nas_space=nas_space,
-                acc_fn=acc_fn,
-                cfg=cfg,
-                backend=backend,
-                scenario=sc,
-            ),
+    jobs = []
+    for sc in scenarios_lib.expand(scenarios):
+        kwargs = dict(
+            nas_space=nas_space,
+            acc_fn=acc_fn,
+            cfg=cfg,
+            backend=backend,
+            scenario=sc,
         )
-        for sc in scenarios_lib.expand(scenarios)
-    ]
+        spec = None if transfer_specs is None else transfer_specs.get(sc.name)
+        if spec is not None:
+            kwargs["transfer"] = spec
+        jobs.append(
+            SearchJob(
+                name=f"sweep.{sc.name}",
+                fn=sweep_lib.DRIVERS[driver],
+                kwargs=kwargs,
+            )
+        )
+    return jobs

@@ -1,0 +1,326 @@
+"""Scenario-transfer search: features, medoid scheduling, warm starts.
+
+Covers the transfer layer end to end:
+
+* ``scenarios.features`` — canonical numeric embedding: equal scenarios map
+  to equal vectors regardless of registration order or workload dict
+  ordering;
+* ``scenarios.grid`` — deterministic expansion with roofline-derived
+  targets;
+* ``sweep.plan_transfer`` — deterministic medoid/donor selection, including
+  under distance ties;
+* ``controllers.*.transfer_from`` — version/shape rejection, fresh-RNG
+  adoption;
+* ``search._drive`` transfer path — provenance recording, cold-path
+  checkpoints bitwise identical to transfer-free builds, resume ignores the
+  spec;
+* transfer-scheduled sweeps (serial + concurrent) and the persistent
+  process pool that serves both waves off one spawn.
+"""
+from __future__ import annotations
+
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import nas, scenarios, search, sweep
+from repro.core.controllers import CONTROLLERS, TRAJECTORY_VERSION
+from repro.core.proxy import SurrogateAccuracy
+from repro.core.scenarios import Scenario
+from repro.core.search import SearchConfig, TransferSpec
+from repro.core.space import concat
+from repro.core import has as has_lib
+
+
+def _acc():
+    return SurrogateAccuracy()
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+
+
+def test_equal_scenarios_equal_features_regardless_of_dict_order():
+    a = Scenario(name="a", latency_target_ms=0.5,
+                 workload={"params_b": 2.0, "seq_len": 4096, "train": 1})
+    b = Scenario(name="b", latency_target_ms=0.5,
+                 workload={"train": 1, "seq_len": 4096, "params_b": 2.0})
+    assert np.array_equal(scenarios.features(a), scenarios.features(b))
+
+
+def test_features_independent_of_registration_order():
+    a = Scenario(name="ra", latency_target_ms=0.7, area_target_mm2=20.0)
+    b = Scenario(name="rb", energy_target_mj=0.5)
+    fa1, fb1 = scenarios.features(a), scenarios.features(b)
+    # register in one order, then the other: pure functions of the scenario
+    scenarios.register(a, overwrite=True)
+    scenarios.register(b, overwrite=True)
+    fa2 = scenarios.features(scenarios.get("ra"))
+    scenarios.register(b, overwrite=True)
+    scenarios.register(a, overwrite=True)
+    fa3 = scenarios.features(scenarios.get("ra"))
+    fb3 = scenarios.features(scenarios.get("rb"))
+    assert np.array_equal(fa1, fa2) and np.array_equal(fa2, fa3)
+    assert np.array_equal(fb1, fb3)
+    assert not np.array_equal(fa1, fb1)
+
+
+def test_feature_vector_shape_and_names():
+    sc = Scenario(name="shape", latency_target_ms=0.3)
+    f = scenarios.features(sc)
+    assert f.shape == (len(scenarios.FEATURE_NAMES),)
+    assert f.dtype == np.float64
+
+
+# ---------------------------------------------------------------------------
+# grid
+# ---------------------------------------------------------------------------
+
+
+def test_grid_is_deterministic_and_distinct():
+    g1 = scenarios.grid(limit=12)
+    g2 = scenarios.grid(limit=12)
+    assert [s.name for s in g1] == [s.name for s in g2]
+    assert [s.latency_target_ms for s in g1] == [
+        s.latency_target_ms for s in g2
+    ]
+    feats = np.stack([scenarios.features(s) for s in g1])
+    assert len({tuple(f) for f in feats}) == len(g1)
+    # registered under their grid names, targets in the edge regime
+    for s in g1:
+        assert scenarios.get(s.name) == s
+        assert 0.2 <= s.latency_target_ms <= 2.0
+
+
+def test_grid_full_product_is_hundreds_of_scenarios():
+    full = scenarios.grid()
+    assert len(full) >= 300
+    assert len({s.name for s in full}) == len(full)
+
+
+# ---------------------------------------------------------------------------
+# plan_transfer
+# ---------------------------------------------------------------------------
+
+
+def test_plan_transfer_deterministic_and_complete():
+    scs = scenarios.expand("paper-use-cases")
+    p1 = sweep.plan_transfer(scs)
+    p2 = sweep.plan_transfer(list(scs))
+    assert p1 == p2
+    assert set(p1.medoids) | set(p1.donors) == {s.name for s in scs}
+    assert not set(p1.medoids) & set(p1.donors)
+    for donor in p1.donors.values():
+        assert donor in p1.medoids
+
+
+def test_plan_transfer_tie_break_is_lowest_index():
+    # three identical scenarios + one far point: all pairwise distances
+    # among the clones tie at 0, so the donor of every warm clone must be
+    # the first-registered medoid — deterministically
+    clones = [
+        Scenario(name=f"tie-{i}", latency_target_ms=0.5) for i in range(3)
+    ]
+    far = Scenario(name="tie-far", latency_target_ms=0.5, energy_target_mj=9.0)
+    plan = sweep.plan_transfer(clones + [far], k=2)
+    assert plan.medoids[0] == "tie-0"  # lowest index wins the 0-distance tie
+    assert plan.donors["tie-1"] == "tie-0"
+    assert plan.donors["tie-2"] == "tie-0"
+    # and the farthest point is the second medoid
+    assert plan.medoids[1] == "tie-far"
+
+
+def test_plan_transfer_k_clamps():
+    scs = scenarios.expand("paper-use-cases")
+    assert sweep.plan_transfer(scs, k=100).donors == {}
+    p = sweep.plan_transfer(scs, k=1)
+    assert len(p.medoids) == 1
+    assert len(p.donors) == len(scs) - 1
+
+
+# ---------------------------------------------------------------------------
+# controllers.transfer_from
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["ppo", "reinforce", "evolution"])
+def test_transfer_from_rejects_wrong_version(name):
+    space = nas.tiny_space()
+    donor = CONTROLLERS[name](space, seed=0)
+    state = donor.state()
+    state["version"] = TRAJECTORY_VERSION - 1
+    with pytest.raises(ValueError):
+        CONTROLLERS[name](space, seed=1).transfer_from(state)
+
+
+@pytest.mark.parametrize("name", ["ppo", "reinforce"])
+def test_transfer_from_rejects_shape_mismatch(name):
+    joint = concat(nas.tiny_space(), has_lib.has_space())
+    donor = CONTROLLERS[name](joint, seed=0)
+    with pytest.raises(ValueError):
+        CONTROLLERS[name](nas.tiny_space(), seed=1).transfer_from(
+            donor.state()
+        )
+
+
+@pytest.mark.parametrize("name", ["ppo", "reinforce", "evolution"])
+def test_transfer_from_adopts_but_keeps_own_rng(name):
+    space = nas.tiny_space()
+    donor = CONTROLLERS[name](space, seed=0)
+    donor.update(donor.sample(8), np.linspace(0.0, 1.0, 8))
+    warm = CONTROLLERS[name](space, seed=7)
+    warm.transfer_from(donor.state())
+    cold = CONTROLLERS[name](space, seed=7)
+    # same seed, different starting distribution: the warm controller's
+    # next draw reflects the donor's learned state, not the cold init
+    ws, cs = warm.sample(16), cold.sample(16)
+    assert ws.shape == cs.shape
+
+
+# ---------------------------------------------------------------------------
+# search-level transfer
+# ---------------------------------------------------------------------------
+
+SC_A = Scenario(name="xfer-a", latency_target_ms=0.8)
+SC_B = Scenario(name="xfer-b", latency_target_ms=0.7)
+
+
+def test_transfer_records_provenance_and_cold_stays_bitwise(tmp_path):
+    from repro.runtime import Checkpointer, SearchRuntime
+
+    space = nas.tiny_space()
+    cfg = SearchConfig(samples=32, batch=8, seed=0)
+    rt = SearchRuntime(checkpoint=Checkpointer(tmp_path / "ck"))
+    donor = search.joint_search(space, _acc(), cfg=cfg, scenario=SC_A,
+                                runtime=rt, tag="sweep.xfer-a")
+    assert donor.transferred_from is None
+
+    warm = search.joint_search(
+        space, _acc(), cfg=cfg, scenario=SC_B, runtime=rt, tag="sweep.xfer-b",
+        transfer=TransferSpec(donor="xfer-a", donor_tag="sweep.xfer-a"),
+    )
+    assert warm.transferred_from == "xfer-a"
+    state = rt.checkpoint.load("sweep.xfer-b")
+    assert state["transferred_from"] == "xfer-a"
+
+    # cold checkpoints carry no transfer key at all — bitwise identical to
+    # a build without the transfer layer
+    cold_state = rt.checkpoint.load("sweep.xfer-a")
+    assert "transferred_from" not in cold_state
+    rt2 = SearchRuntime(checkpoint=Checkpointer(tmp_path / "ck2"))
+    again = search.joint_search(space, _acc(), cfg=cfg, scenario=SC_A,
+                                runtime=rt2, tag="sweep.xfer-a")
+    # bitwise up to wall_s, the one field that is wall-clock-dependent
+    # (and was already nondeterministic before the transfer layer existed)
+    s1 = rt.checkpoint.load("sweep.xfer-a")
+    s2 = rt2.checkpoint.load("sweep.xfer-a")
+    s1["wall_s"] = s2["wall_s"] = 0.0
+    assert pickle.dumps(s1) == pickle.dumps(s2)
+    assert again.history == donor.history
+
+
+def test_transfer_missing_donor_falls_back_cold(tmp_path):
+    from repro.runtime import Checkpointer, SearchRuntime
+
+    space = nas.tiny_space()
+    cfg = SearchConfig(samples=16, batch=8, seed=0)
+    rt = SearchRuntime(checkpoint=Checkpointer(tmp_path / "ck"))
+    ref = search.joint_search(space, _acc(), cfg=cfg, scenario=SC_B)
+    res = search.joint_search(
+        space, _acc(), cfg=cfg, scenario=SC_B, runtime=rt, tag="t",
+        transfer=TransferSpec(donor="ghost", donor_tag="sweep.ghost"),
+    )
+    assert res.transferred_from is None
+    assert res.history == ref.history  # cold fallback is bitwise cold
+
+
+def test_transfer_incompatible_donor_space_falls_back(tmp_path):
+    from repro.runtime import Checkpointer, SearchRuntime
+
+    space = nas.tiny_space()
+    cfg = SearchConfig(samples=16, batch=8, seed=0)
+    rt = SearchRuntime(checkpoint=Checkpointer(tmp_path / "ck"))
+    # donor searched a different space (fixed_hw: NAS-only)
+    search.fixed_hw_search(space, _acc(), cfg=cfg, scenario=SC_A,
+                           runtime=rt, tag="donor.nasonly")
+    res = search.joint_search(
+        space, _acc(), cfg=cfg, scenario=SC_B, runtime=rt, tag="t",
+        transfer=TransferSpec(donor="xfer-a", donor_tag="donor.nasonly"),
+    )
+    assert res.transferred_from is None
+
+
+def test_resume_ignores_transfer_spec(tmp_path):
+    from repro.core.search import SearchInterrupted
+    from repro.runtime import Budget, Checkpointer, SearchRuntime
+
+    space = nas.tiny_space()
+    cfg = SearchConfig(samples=32, batch=8, seed=0)
+    ref = search.joint_search(space, _acc(), cfg=cfg, scenario=SC_A)
+    rt = SearchRuntime(checkpoint=Checkpointer(tmp_path / "ck"),
+                       budget=Budget(max_samples=16))
+    with pytest.raises(SearchInterrupted):
+        search.joint_search(space, _acc(), cfg=cfg, scenario=SC_A,
+                            runtime=rt, tag="t")
+    # seed a would-be donor; the resumed search must not consult it
+    donor = search.joint_search(space, _acc(), cfg=cfg, scenario=SC_B,
+                                runtime=SearchRuntime(
+                                    checkpoint=rt.checkpoint),
+                                tag="donor")
+    assert donor is not None
+    rt2 = SearchRuntime(checkpoint=rt.checkpoint)
+    res = search.joint_search(
+        space, _acc(), cfg=cfg, scenario=SC_A, runtime=rt2, tag="t",
+        transfer=TransferSpec(donor="xfer-b", donor_tag="donor"),
+    )
+    assert res.transferred_from is None
+    assert res.history == ref.history
+
+
+# ---------------------------------------------------------------------------
+# sweep scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_sweep_serial_matches_cold_best_configs():
+    scs = scenarios.expand("paper-use-cases")
+    cold = sweep.SweepRunner(
+        scs, nas.tiny_space(), _acc(),
+        sweep.SweepConfig(search=SearchConfig(samples=48, batch=16)),
+    ).run()
+    warm = sweep.SweepRunner(
+        scs, nas.tiny_space(), _acc(),
+        sweep.SweepConfig(search=SearchConfig(samples=48, batch=16),
+                          transfer=True),
+    ).run()
+    cb, wb = cold.best_by_scenario(), warm.best_by_scenario()
+    assert all(
+        (cb[k] or {}).get("vec") == (wb[k] or {}).get("vec") for k in cb
+    )
+    transferred = {
+        o.scenario.name: o.result.transferred_from for o in warm.outcomes
+    }
+    assert sum(1 for v in transferred.values() if v) > 0
+    # provenance surfaces in the serialized outcome too
+    d = warm.as_dict()["outcomes"]
+    assert any(o["transferred_from"] for o in d)
+
+
+def test_transfer_sweep_rejects_composite_drivers():
+    with pytest.raises(ValueError, match="transfer"):
+        sweep.SweepRunner(
+            "paper-use-cases", nas.tiny_space(), _acc(),
+            sweep.SweepConfig(driver="phase", transfer=True),
+        )
+
+
+def test_scenario_jobs_reject_transfer_for_composite_drivers():
+    from repro.runtime import scenario_jobs
+
+    with pytest.raises(ValueError, match="transfer"):
+        scenario_jobs(
+            "paper-use-cases", nas.tiny_space(), _acc(), driver="nested",
+            transfer_specs={"lat-0.3ms": TransferSpec(donor="x")},
+        )
