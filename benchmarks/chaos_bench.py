@@ -1,0 +1,188 @@
+"""Chaos hardening: what self-healing costs, and what disabled faults don't.
+
+Two questions from the chaos-runtime issue:
+
+1. **recovery cost** — a 2-worker process sweep under an injected chaos
+   schedule (worker crash + transient exception) vs the identical fault-free
+   sweep: wall-clock ratio, recovery counters, and the invariant that the
+   per-scenario winners are identical (asserted, not just reported — a
+   silent divergence here would invalidate every chaos test upstream);
+2. **disabled-path overhead** — with no faults armed the injector must be
+   free (``FaultInjector.runtime`` returns the runtime untouched) and the
+   only always-on addition is the checkpoint sha256 footer. Two views:
+   interleaved repeated thread sweeps with digests on vs off (end-to-end,
+   but IO-noise-bound at this scale), and an *accounted* bound — the
+   measured per-blob sha256 cost times the sweep's actual save+load count,
+   as a fraction of the sweep wall — which is what the < 2% acceptance bar
+   asserts on (a 14 ms bar inside a ~1 s sweep is below the noise floor of
+   a shared CI runner; the accounted bound is stable and strictly honest,
+   since hashing is the only work the digest path adds).
+"""
+from __future__ import annotations
+
+import hashlib
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import nas, proxy
+from repro.core.search import SearchConfig
+from repro.runtime import (
+    Checkpointer,
+    DurableRecordStore,
+    FaultPlan,
+    SearchExecutor,
+    scenario_jobs,
+)
+
+SCENARIOS = ["lat-0.3ms", "edge-sku-nano", "energy-1mJ", "lat-0.8ms"]
+
+
+def _jobs(samples: int):
+    return scenario_jobs(
+        SCENARIOS,
+        nas.tiny_space(),
+        proxy.SurrogateAccuracy(),
+        SearchConfig(samples=samples, batch=8, controller="evolution"),
+    )
+
+
+def _sweep(root: Path, samples: int, processes: bool, **kw) -> tuple:
+    ex = SearchExecutor(
+        store=DurableRecordStore(root / "s.jsonl"),
+        checkpoint=Checkpointer(root / "ck"),
+        max_workers=2,
+        processes=processes,
+        **kw,
+    )
+    t0 = time.perf_counter()
+    report = ex.run(_jobs(samples))
+    wall = time.perf_counter() - t0
+    ex.close()
+    return report, wall
+
+
+def _winners(report) -> dict:
+    return {
+        name: tuple(np.asarray(out.result.best_vec).tolist())
+        for name, out in report.outcomes.items()
+    }
+
+
+def _ckpt_micro(reps: int) -> tuple:
+    """Interleaved save+load medians with and without the digest footer."""
+    state = {
+        "progress": {"done": 64, "history": [{"accuracy": 0.1}] * 64},
+        "controller": {"logits": np.zeros((26, 4)), "step": 64},
+    }
+    times: dict[bool, list] = {True: [], False: []}
+    with tempfile.TemporaryDirectory() as tmp:
+        cks = {d: Checkpointer(Path(tmp) / str(d), digest=d) for d in (True, False)}
+        for _ in range(reps):
+            for d in (True, False):
+                t0 = time.perf_counter()
+                cks[d].save("bench", state)
+                cks[d].load("bench")
+                times[d].append(time.perf_counter() - t0)
+        blob_len = cks[True]._path("bench").stat().st_size
+    return (
+        float(np.median(times[True])),
+        float(np.median(times[False])),
+        blob_len,
+    )
+
+
+def _sha256_us(blob_len: int, reps: int = 2000) -> float:
+    """Measured per-blob hashing cost at the sweep's real checkpoint size —
+    the only work the digest path adds on both save and load."""
+    blob = b"\x5a" * blob_len
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        hashlib.sha256(blob).hexdigest()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = True) -> dict:
+    samples = 24 if fast else 96
+    micro_reps = 200 if fast else 1000
+    e2e_reps = 3 if fast else 5
+
+    chaos_plan = FaultPlan.parse(
+        "crash:sweep.edge-sku-nano:0:1;exc:sweep.lat-0.8ms:1:1"
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        tmp = Path(tmp)
+        clean, clean_s = _sweep(tmp / "clean", samples, processes=True)
+        chaos, chaos_s = _sweep(
+            tmp / "chaos",
+            samples,
+            processes=True,
+            faults=chaos_plan,
+            retry_backoff_s=0.05,
+        )
+        # the recovery invariant — a divergence here is a bug, not a datum
+        assert _winners(chaos) == _winners(clean), "chaos changed a winner"
+        assert not chaos.quarantined
+        recovery = dict(chaos.recovery)
+
+        # disabled path, end-to-end: interleaved thread sweeps, digests on
+        # (the shipping default; fault hooks armed-but-empty) vs off — best
+        # of each so a one-off IO stall doesn't masquerade as overhead
+        walls: dict[bool, list] = {True: [], False: []}
+        saves = loads = 0
+        for rep in range(e2e_reps):
+            for d in (True, False):
+                ck = Checkpointer(tmp / f"e2e-{rep}-{d}" / "ck", digest=d)
+                ex = SearchExecutor(
+                    store=DurableRecordStore(tmp / f"e2e-{rep}-{d}" / "s.jsonl"),
+                    checkpoint=ck,
+                    max_workers=2,
+                )
+                t0 = time.perf_counter()
+                ex.run(_jobs(samples))
+                walls[d].append(time.perf_counter() - t0)
+                ex.close()
+                if d:
+                    saves, loads = ck.saved, ck.loaded
+        on_s, off_s = min(walls[True]), min(walls[False])
+
+    overhead_pct = (on_s - off_s) / off_s * 100.0
+    micro_on, micro_off, blob_len = _ckpt_micro(micro_reps)
+    micro_pct = (micro_on - micro_off) / micro_off * 100.0
+    # the accounted bound the acceptance bar asserts on: hashing is the only
+    # added work, so (per-blob sha256 cost) x (actual save+load count) over
+    # the sweep wall bounds the disabled-path overhead from above
+    hash_us = _sha256_us(blob_len)
+    accounted_pct = hash_us * (saves + loads) / (off_s * 1e6) * 100.0
+    recovery_x = chaos_s / clean_s
+
+    return {
+        "fault_free_wall_s": clean_s,
+        "chaos_wall_s": chaos_s,
+        "recovery_wall_x": recovery_x,
+        "retries": recovery["retries"],
+        "respawns": recovery["respawns"],
+        "crashes": recovery["crashes"],
+        "winners_identical": 1,  # asserted above
+        "disabled_overhead_e2e_pct": overhead_pct,
+        "disabled_overhead_accounted_pct": accounted_pct,
+        "ckpt_saves_per_sweep": saves,
+        "ckpt_sha256_us": hash_us,
+        "ckpt_digest_save_load_us": micro_on * 1e6,
+        "ckpt_digest_micro_pct": micro_pct,
+        "overhead_under_2pct": bool(accounted_pct < 2.0),
+        "n_evals": samples * len(SCENARIOS),
+        "derived": (
+            f"chaos {recovery_x:.2f}x fault-free wall "
+            f"({recovery['respawns']} respawn(s), {recovery['retries']} "
+            f"retried), winners identical; disabled-path overhead "
+            f"{accounted_pct:.3f}% accounted ({overhead_pct:+.2f}% e2e noise)"
+        ),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    print(out["derived"])

@@ -44,10 +44,11 @@ BENCHES = [
     ("meshsearch", "benchmarks.meshsearch_bench"),
     ("roofline", "benchmarks.roofline"),
     ("obs", "benchmarks.obs_bench"),
+    ("chaos", "benchmarks.chaos_bench"),
 ]
 
 QUICK = ("engine", "search_loop", "hw_backend", "roofline", "serve",
-         "executor", "transfer", "obs")
+         "executor", "transfer", "obs", "chaos")
 
 
 def main() -> None:

@@ -32,6 +32,12 @@ whatever populated the store. The exit summary on stderr reports the serve
 stats; ``evaluations=0`` is load-bearing — CI greps it to prove the serve
 tier never touched the simulator.
 
+Snapshots are digest-verified at load by default (``--no-verify`` or
+``--quick`` to trust them); a snapshot that fails verification is not served
+— the CLI exits, or, when ``--store`` is also given, falls back to replaying
+the durable log (the source of truth the snapshot was compacted from) with a
+warning on stderr.
+
 Flags shared with ``scripts/sweep.py`` (one ``repro.runtime.cli`` parent):
 ``--preset`` answers a whole scenario preset, ``--quick`` skips snapshot
 digest verification, and ``--budget-samples``/``--deadline-s`` switch
@@ -161,6 +167,12 @@ def main() -> None:
         "--serve", action="store_true", help="read queries from stdin, one per line"
     )
     ap.add_argument("--json", action="store_true", help="one JSON object per answer")
+    ap.add_argument(
+        "--no-verify",
+        action="store_true",
+        help="trust --snapshot without digest verification (verification is "
+        "on by default; --quick implies it too)",
+    )
     args = ap.parse_args()
 
     if args.store is None and args.snapshot is None:
@@ -182,16 +194,37 @@ def main() -> None:
         )
         server = FrontierServer.from_snapshot(args.compact_to)
     elif args.snapshot is not None:
-        # --quick trusts the artifact (CI smoke / local iteration): skip the
-        # whole-payload digest verification, and say so
-        snap = load_snapshot(args.snapshot, verify=not args.quick)
-        server = FrontierServer(snap.frontier())
-        verified = "digest unverified (--quick)" if args.quick else "verified"
-        print(
-            f"# {args.snapshot}: frontier {snap.count} "
-            f"(snapshot v{snap.header['version']}, {verified})",
-            file=sys.stderr,
-        )
+        # verification is the default: a serve tier must not answer off a
+        # silently-corrupt artifact. --quick/--no-verify trust it (CI smoke /
+        # local iteration); a failed verify falls back to replaying the
+        # durable log when --store is also given — the log is the source of
+        # truth the snapshot was compacted from.
+        skip_verify = args.quick or args.no_verify
+        snap = None
+        try:
+            snap = load_snapshot(args.snapshot, verify=not skip_verify)
+        except Exception as e:  # noqa: BLE001 - any unreadable/corrupt artifact
+            if args.store is None:
+                raise SystemExit(
+                    f"error: snapshot {args.snapshot} failed verification "
+                    f"({e}); re-create it (--compact-to) or serve the store "
+                    f"log directly (--store)"
+                )
+            print(
+                f"# WARNING: snapshot {args.snapshot} failed verification "
+                f"({e}); falling back to {args.store} log replay",
+                file=sys.stderr,
+            )
+        if snap is not None:
+            server = FrontierServer(snap.frontier())
+            verified = "digest unverified" if skip_verify else "verified"
+            print(
+                f"# {args.snapshot}: frontier {snap.count} "
+                f"(snapshot v{snap.header['version']}, {verified})",
+                file=sys.stderr,
+            )
+        else:
+            server = FrontierServer()
         if args.store is not None:
             frontier, info = load_store_frontier(args.store)
             server.merge_frontier(frontier)

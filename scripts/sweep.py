@@ -19,6 +19,13 @@ the budget expires (exit code 3: resumable). ``--snapshot PATH`` writes a
 compacted frontier snapshot after the sweep for ``runtime_serve.py``.
 Shared flags live in ``repro.runtime.cli``.
 
+Process mode self-heals: a crashed or hung worker (``--job-deadline-s``) is
+killed and respawned, its job retried from checkpoint up to
+``--max-job-retries`` times, so the sweep completes in one invocation; the
+greppable ``recovery:`` stderr line reports the counters. Set
+``REPRO_FAULTS`` (``repro.runtime.faults``) to inject deterministic chaos —
+see docs/architecture.md ("Fault tolerance").
+
 Backends (``--backend``, see ``repro.hw``): ``analytic`` (exact simulator,
 default), ``learned`` (an MLP cost model trained on the fly, energy head
 included), ``cascade`` (vectorized lower-bound prefilter in front of the
@@ -158,6 +165,22 @@ def build_parser() -> argparse.ArgumentParser:
         "(XLA_FLAGS=--xla_force_host_platform_device_count=D)",
     )
     ap.add_argument(
+        "--max-job-retries",
+        type=int,
+        default=3,
+        metavar="N",
+        help="failed/crashed scenario jobs are retried (resuming from their "
+        "checkpoints) up to N times before quarantine (0 = fail fast)",
+    )
+    ap.add_argument(
+        "--job-deadline-s",
+        type=float,
+        default=None,
+        metavar="S",
+        help="kill a scenario job running longer than S seconds (measured "
+        "from its start ack) and retry it — hung-worker protection",
+    )
+    ap.add_argument(
         "--checkpoint-every",
         type=int,
         default=1,
@@ -270,6 +293,8 @@ def main() -> None:
         transfer=args.transfer,
         transfer_samples=args.transfer_samples,
         transfer_medoids=args.transfer_medoids,
+        max_job_retries=args.max_job_retries,
+        job_deadline_s=args.job_deadline_s,
     )
     runner = sweep.SweepRunner(selected, space, proxy.SurrogateAccuracy(), cfg)
     cfg.backend = build_backend(args, runner)
@@ -297,6 +322,20 @@ def main() -> None:
         print()
         print(result.table())
         print(f"wall: {result.wall_s:.1f}s")
+        if result.recovery is not None:
+            rec = result.recovery
+            ckpt_corrupt = (result.store_stats or {}).get("ckpt_corrupt", 0)
+            # stderr, one greppable line: CI's chaos smoke asserts on it
+            print(
+                f"recovery: retries={rec.get('retries', 0)} "
+                f"respawns={rec.get('respawns', 0)} "
+                f"deadline_kills={rec.get('deadline_kills', 0)} "
+                f"heartbeat_kills={rec.get('heartbeat_kills', 0)} "
+                f"crashes={rec.get('crashes', 0)} "
+                f"quarantined={rec.get('quarantined', 0)} "
+                f"ckpt_corrupt={ckpt_corrupt}",
+                file=sys.stderr,
+            )
         casc = getattr(cfg.backend, "stats", None)
         if casc is not None and args.backend == "cascade":
             print(

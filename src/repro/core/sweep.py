@@ -95,6 +95,13 @@ class SweepConfig:
     workers: int = 0
     processes: bool = False
     devices_per_worker: Optional[int] = None
+    # self-healing knobs (repro.runtime.executor): a failed/crashed scenario
+    # job is retried (with backoff, resuming from its checkpoint) up to
+    # max_job_retries times before quarantine; job_deadline_s kills a job
+    # running longer than this (measured from its start ack) so hung workers
+    # cannot stall the wave. Fault injection (REPRO_FAULTS) rides on top.
+    max_job_retries: int = 3
+    job_deadline_s: Optional[float] = None
     # process mode: hold workers at a barrier until all are imported+ready
     # and report the setup time as ExecutorReport.spawn_s
     sync_start: bool = False
@@ -152,6 +159,10 @@ class SweepResult:
     # process-mode extra (sync_start): one-time worker spin-up wall clock,
     # reported once per pool even when transfer runs multiple waves over it
     spawn_s: Optional[float] = None
+    # self-healing counters summed across waves (ExecutorReport.recovery):
+    # retries / respawns / deadline_kills / heartbeat_kills / crashes /
+    # quarantined. None on the serial path.
+    recovery: Optional[dict] = None
 
     @property
     def cross_scenario_hit_rate(self) -> float:
@@ -214,6 +225,7 @@ class SweepResult:
             "cross_scenario_hit_rate": self.cross_scenario_hit_rate,
             "wall_s": self.wall_s,
             "spawn_s": self.spawn_s,
+            "recovery": self.recovery,
         }
 
 
@@ -512,6 +524,8 @@ class SweepRunner:
             processes=cfg.processes,
             devices_per_worker=cfg.devices_per_worker,
             sync_start=cfg.sync_start,
+            max_job_retries=cfg.max_job_retries,
+            job_deadline_s=cfg.job_deadline_s,
             # transfer runs two waves (cold medoids, then the warm fan-out)
             # against one spawned fleet: warm donor checkpoints ship through
             # the shared Checkpointer, not a worker respawn
@@ -570,6 +584,7 @@ class SweepRunner:
                 outcomes = dict(report.outcomes)
                 spawn_s = report.spawn_s
                 store_stats = report.store_stats
+                recovery = report.recovery
                 if warm:
                     jobs = scenario_jobs(
                         warm,
@@ -586,6 +601,11 @@ class SweepRunner:
                     # cumulative counters: the warm wave's snapshot already
                     # folds the cold wave's work (same pool, same segments)
                     store_stats = report.store_stats
+                    if report.recovery is not None:
+                        recovery = {
+                            k: (recovery or {}).get(k, 0) + v
+                            for k, v in report.recovery.items()
+                        }
             else:
                 jobs = scenario_jobs(
                     self.scenarios,
@@ -607,6 +627,7 @@ class SweepRunner:
                 outcomes = dict(report.outcomes)
                 spawn_s = report.spawn_s
                 store_stats = report.store_stats
+                recovery = report.recovery
         finally:
             ex.close()
             if cleanup is not None:
@@ -619,6 +640,7 @@ class SweepRunner:
             wall_s=time.monotonic() - t0,
         )
         out.spawn_s = spawn_s
+        out.recovery = recovery
         return out
 
 

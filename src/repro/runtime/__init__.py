@@ -44,20 +44,30 @@ from repro.runtime.executor import (
     WorkerError,
     scenario_jobs,
 )
+from repro.runtime.faults import (
+    FAULTS_ENV,
+    FaultInjector,
+    FaultPlan,
+    TransientFault,
+)
 from repro.runtime.store import DurableRecordStore
 
 __all__ = [
+    "FAULTS_ENV",
     "SELFKILL_ENV",
     "Budget",
     "Checkpointer",
     "DurableRecordStore",
     "ExecutorReport",
+    "FaultInjector",
+    "FaultPlan",
     "JobOutcome",
     "SearchExecutor",
     "SearchJob",
     "SearchRuntime",
     "SharedBudget",
     "StopToken",
+    "TransientFault",
     "WorkerCrashed",
     "WorkerError",
     "result_from_state",

@@ -33,6 +33,7 @@ service-level snapshots; ``ParetoFrontier`` serializes itself
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import pickle
 import re
@@ -43,8 +44,16 @@ from typing import Optional, Union
 import numpy as np
 
 from repro.core.search import SearchResult
+from repro.obs import trace as obs_trace
 
 _TAG_RE = re.compile(r"[^A-Za-z0-9._-]")
+
+# integrity footer appended after the pickle payload on save: magic + the
+# payload's sha256 hexdigest + newline. pickle stops at its STOP opcode, so
+# digest-less legacy files and footered files are both loadable; the footer
+# makes corruption detectable instead of an unpickling crash.
+_DIGEST_MAGIC = b"#repro-ckpt-sha256:"
+_FOOTER_LEN = len(_DIGEST_MAGIC) + 64 + 1
 
 
 def _tag_file(tag: str) -> str:
@@ -55,10 +64,22 @@ def _tag_file(tag: str) -> str:
 
 
 class Checkpointer:
-    """Atomic tagged pickle blobs in one directory (see module doc)."""
+    """Atomic tagged pickle blobs in one directory (see module doc).
 
-    def __init__(self, root: Union[str, Path]):
+    Every save appends a sha256 content digest (``_DIGEST_MAGIC`` footer)
+    and every load verifies it: a corrupt checkpoint — bit rot, a torn copy,
+    an injected fault — is treated as *missing* (``load`` returns ``None``,
+    counted in ``corrupt``), so the search cold-restarts that scenario
+    instead of dying in ``pickle.load``. ``digest=False`` skips writing
+    footers (micro-benchmarks measuring the disabled path); verification
+    still applies to any footered file it reads."""
+
+    def __init__(self, root: Union[str, Path], digest: bool = True):
         self.root = Path(root)
+        self.digest = digest
+        self.saved = 0  # checkpoints written
+        self.loaded = 0  # checkpoints read back intact
+        self.corrupt = 0  # loads dropped: digest mismatch / unreadable pickle
         self.root.mkdir(parents=True, exist_ok=True)
         for stray in self.root.glob("*.tmp"):  # a kill mid-save leaves these
             try:
@@ -71,12 +92,16 @@ class Checkpointer:
 
     def save(self, tag: str, state: dict) -> Path:
         path = self._path(tag)
+        blob = pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL)
+        if self.digest:
+            digest = hashlib.sha256(blob).hexdigest().encode("ascii")
+            blob += _DIGEST_MAGIC + digest + b"\n"
         fd, tmp = tempfile.mkstemp(
             prefix=path.name + ".", suffix=".tmp", dir=str(self.root)
         )
         try:
             with os.fdopen(fd, "wb") as f:
-                pickle.dump(state, f, protocol=pickle.HIGHEST_PROTOCOL)
+                f.write(blob)
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, path)
@@ -86,14 +111,39 @@ class Checkpointer:
             except OSError:
                 pass
             raise
+        self.saved += 1
         return path
 
     def load(self, tag: str) -> Optional[dict]:
         path = self._path(tag)
         if not path.exists():
             return None
-        with open(path, "rb") as f:
-            return pickle.load(f)
+        data = path.read_bytes()
+        payload = data
+        if len(data) >= _FOOTER_LEN and data[-_FOOTER_LEN:].startswith(
+            _DIGEST_MAGIC
+        ):
+            payload = data[:-_FOOTER_LEN]
+            want = data[-65:-1]
+            got = hashlib.sha256(payload).hexdigest().encode("ascii")
+            if got != want:
+                return self._drop_corrupt(tag, "sha256 mismatch")
+        try:
+            state = pickle.loads(payload)
+        except Exception as e:  # noqa: BLE001 - any unreadable pickle
+            return self._drop_corrupt(tag, f"{type(e).__name__}: {e}")
+        self.loaded += 1
+        return state
+
+    def _drop_corrupt(self, tag: str, why: str) -> None:
+        """Corrupt checkpoint == missing checkpoint: the caller falls back
+        to a cold start of that search, which the deterministic trajectory
+        makes result-identical — strictly better than crashing."""
+        self.corrupt += 1
+        tr = obs_trace.active()
+        if tr is not None:
+            tr.instant("checkpoint_corrupt", {"tag": tag, "why": why})
+        return None
 
     def exists(self, tag: str) -> bool:
         return self._path(tag).exists()

@@ -35,10 +35,25 @@ global decision. ``SearchExecutor.stop()`` is the graceful stop: every
 in-flight search checkpoints at its next batch boundary; a later run with
 the same checkpoint directory resumes all of them, completed ones replaying
 for free — including searches a killed or crashed worker left behind.
+
+**Self-healing** (process mode): jobs are dispatched one at a time to their
+round-robin slot; workers heartbeat between batches. When a worker dies
+mid-job, the parent respawns the slot and re-dispatches the job — the fresh
+attempt resumes from the dead worker's last checkpoint and warm store
+segment, so retried work replays instead of re-simulating, and per-scenario
+trajectories stay bitwise-identical to a fault-free run. A hung-but-alive
+worker is detected by the per-job deadline (``job_deadline_s``) or the
+heartbeat timeout, killed, and its job re-dispatched the same way. Retries
+are capped (``max_job_retries``) with exponential backoff; a job that
+exhausts them is *quarantined* (``JobOutcome.quarantined``) so one poison
+job cannot wedge a grid sweep. ``report.recovery`` counts every healing
+action. Deterministic fault injection to exercise all of this lives in
+``repro.runtime.faults`` (env ``REPRO_FAULTS``).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import multiprocessing
 import os
@@ -60,6 +75,7 @@ from repro.obs import trace as obs_trace
 
 from repro.runtime.checkpoint import Checkpointer, result_from_state, result_state
 
+from repro.runtime import faults as faults_lib
 from repro.runtime.store import _SEGMENT_INFIX, DurableRecordStore
 
 # test/CI hook: "<worker_id>:<admits>" makes that worker hard-exit (os._exit,
@@ -241,6 +257,10 @@ class JobOutcome:
     status: str  # "done" | "interrupted" | "error"
     result: Optional[SearchResult] = None
     error: Optional[BaseException] = None
+    attempts: int = 1  # dispatches it took (1 = no retry was needed)
+    # the job failed/crashed on every allowed attempt and was given up on so
+    # the rest of the sweep could finish (status is "error")
+    quarantined: bool = False
 
 
 class WorkerCrashed(RuntimeError):
@@ -264,6 +284,10 @@ class ExecutorReport:
     # (jax import + space rebuild), and the job -> worker shard map
     spawn_s: Optional[float] = None
     shards: Optional[dict[str, int]] = None
+    # self-healing counters: retries, respawns, deadline_kills,
+    # heartbeat_kills, crashes, quarantined (zero-valued when nothing
+    # needed healing)
+    recovery: Optional[dict] = None
 
     @property
     def done(self) -> list[str]:
@@ -276,6 +300,10 @@ class ExecutorReport:
     @property
     def errors(self) -> dict[str, BaseException]:
         return {n: o.error for n, o in self.outcomes.items() if o.status == "error"}
+
+    @property
+    def quarantined(self) -> list[str]:
+        return [n for n, o in self.outcomes.items() if o.quarantined]
 
 
 def _ship_error(e: BaseException) -> dict:
@@ -308,19 +336,27 @@ def _process_worker(
     stop_event,
     go_event,
     out_q,
+    fault_spec: Optional[str] = None,
+    heartbeat_s: Optional[float] = None,
 ) -> None:
-    """Worker main: a persistent wave loop. The worker sets up once (jax
-    import, store segment, checkpointer), then serves pickled job shards off
-    its input queue — one ``(wave) payload`` per ``SearchExecutor.run()``
-    call — until the ``None`` sentinel. Reusing the process across waves is
-    what amortizes the multi-second spawn cost over a whole grid sweep.
+    """Worker main: a persistent job loop. The worker sets up once (jax
+    import, store segment, checkpointer), then serves pickled
+    ``("job", (job, attempt))`` messages off its input queue — the parent
+    dispatches at most one at a time per worker and marks wave boundaries
+    with ``("wave_end", None)`` — until the ``None`` sentinel. Reusing the
+    process across waves is what amortizes the multi-second spawn cost over
+    a whole grid sweep.
 
     Spawned (not forked): jax state is never shared with the parent, and
     XLA_FLAGS set by the parent before start() are honored on this process's
-    first jax import. After each wave the worker ships its *cumulative*
-    store counters (``wave_end``); the parent keeps the latest snapshot per
-    worker, which aligns with the crash path (segment lines are counted from
-    the pool-spawn offset)."""
+    first jax import. A daemon heartbeat thread puts ``("hb", id, None)``
+    every ``heartbeat_s`` so the parent can tell hung from busy; each job
+    dispatch is acknowledged with a ``("start", ...)`` message that starts
+    the parent's per-job deadline clock. At each wave boundary the worker
+    ships its *cumulative* store + checkpoint counters (``wave_end``); the
+    parent keeps the latest snapshot per worker, which aligns with the crash
+    path (segment lines are counted from the pool-spawn offset).
+    ``fault_spec`` arms a deterministic ``repro.runtime.faults`` plan."""
     t_spawn = time.monotonic_ns()  # worker-main entry: the spawn span start
     try:
         # trace enablement crosses the spawn boundary as an env var (like
@@ -334,6 +370,25 @@ def _process_worker(
         checkpoint = (
             None if checkpoint_root is None else Checkpointer(checkpoint_root)
         )
+        hb_stop = threading.Event()
+        if heartbeat_s:
+            def _beat() -> None:
+                while not hb_stop.wait(heartbeat_s):
+                    try:
+                        out_q.put(("hb", worker_id, None))
+                    except Exception:  # noqa: BLE001 - parent gone: stop
+                        return
+
+            threading.Thread(target=_beat, daemon=True).start()
+        injector = None
+        plan = faults_lib.FaultPlan.parse(fault_spec)
+        if plan:
+            # a hung worker stops heartbeating too — "alive but silent" is
+            # the failure mode the heartbeat timeout exists for
+            injector = faults_lib.FaultInjector(
+                plan, process=True, on_hang=hb_stop.set
+            )
+            checkpoint = injector.checkpointer(checkpoint)
         runtime = SearchRuntime(
             store=store,
             checkpoint=checkpoint,
@@ -354,37 +409,50 @@ def _process_worker(
             # phase a merged trace shows before the per-job steady state
             tracer.complete_since_ns("worker_spawn", t_spawn, {})
         while True:
-            payload = in_q.get()
-            if payload is None:  # shutdown sentinel
+            msg = in_q.get()
+            if msg is None:  # shutdown sentinel
                 break
-            jobs: list[SearchJob] = pickle.loads(payload)
-            for job in jobs:
-                with obs_trace.span("job", job=job.name):
-                    try:
-                        res = job.fn(**job.kwargs, runtime=runtime, tag=job.name)
-                        out_q.put(("done", job.name, result_state(res)))
-                    except SearchInterrupted as e:
-                        out_q.put(
-                            (
-                                "interrupted",
-                                job.name,
-                                {
-                                    "tag": e.tag,
-                                    "samples_done": e.samples_done,
-                                    "samples": e.samples,
-                                },
-                            )
+            kind, payload = msg
+            if kind == "wave_end":
+                stats: dict = {}
+                if store is not None:
+                    store.flush()
+                    stats = dict(store.stats.as_dict())
+                    stats["appended"] = store.appended
+                if checkpoint is not None:
+                    stats["ckpt_corrupt"] = getattr(checkpoint, "corrupt", 0)
+                out_q.put(("wave_end", worker_id, stats or None))
+                continue
+            job, attempt = pickle.loads(payload)
+            out_q.put(
+                ("start", worker_id, {"job": job.name, "attempt": attempt})
+            )
+            job_runtime = runtime
+            if injector is not None:
+                job_runtime = injector.runtime(runtime, job.name, attempt)
+            with obs_trace.span("job", job=job.name, attempt=attempt):
+                try:
+                    res = job.fn(**job.kwargs, runtime=job_runtime, tag=job.name)
+                    out_q.put(("done", job.name, result_state(res)))
+                except SearchInterrupted as e:
+                    out_q.put(
+                        (
+                            "interrupted",
+                            job.name,
+                            {
+                                "tag": e.tag,
+                                "samples_done": e.samples_done,
+                                "samples": e.samples,
+                            },
                         )
-                    except Exception as e:  # noqa: BLE001 - isolate siblings
-                        out_q.put(("error", job.name, _ship_error(e)))
-                if tracer is not None:
-                    tracer.flush()  # a later hard kill keeps finished-job spans
-            stats = None
-            if store is not None:
-                store.flush()
-                stats = dict(store.stats.as_dict())
-                stats["appended"] = store.appended
-            out_q.put(("wave_end", worker_id, stats))
+                    )
+                except Exception as e:  # noqa: BLE001 - isolate siblings
+                    out_q.put(("error", job.name, _ship_error(e)))
+            if injector is not None:
+                injector.after_job(job.name, attempt, store)
+            if tracer is not None:
+                tracer.flush()  # a later hard kill keeps finished-job spans
+        hb_stop.set()
         if store is not None:
             store.close()
         out_q.put(("exit", worker_id, None))
@@ -396,7 +464,10 @@ def _process_worker(
 
 @dataclasses.dataclass
 class _ProcessPool:
-    """A spawned worker fleet kept alive across ``run()`` waves."""
+    """A spawned worker fleet kept alive across ``run()`` waves. Slots are
+    respawnable: when a worker dies, a fresh process takes over its id (and
+    so its single-writer store segment); the dead incarnation's durable
+    counters are reconstructed into ``dead_stats`` first."""
 
     procs: list
     in_qs: list
@@ -407,13 +478,21 @@ class _ProcessPool:
     store_path: Optional[Path]
     k: int
     t_spawn: float  # monotonic at spawn
+    ctx: object  # the spawn context (respawns come from the same one)
+    checkpoint_root: Optional[str]
+    checkpoint_every: int
+    fault_spec: Optional[str]
+    heartbeat_s: Optional[float]
     # pre-spawn segment sizes: crash reconstruction counts complete lines
-    # appended past these offsets (cumulative, like the shipped counters)
+    # appended past these offsets (cumulative, like the shipped counters);
+    # advanced to the respawn point when a slot is respawned
     seg_offsets: dict[int, int] = dataclasses.field(default_factory=dict)
     # latest cumulative store counters per worker (wave_end snapshots)
     worker_stats: dict[int, Optional[dict]] = dataclasses.field(
         default_factory=dict
     )
+    # reconstructed counters of dead incarnations (one dict per death)
+    dead_stats: list[dict] = dataclasses.field(default_factory=list)
     ready: set[int] = dataclasses.field(default_factory=set)
     spawn_s: Optional[float] = None
     broken: bool = False  # a worker died/fataled: respawn before reuse
@@ -436,10 +515,34 @@ class SearchExecutor:
         devices_per_worker: Optional[int] = None,
         sync_start: bool = False,
         persistent: bool = False,
+        faults: Optional[Union[str, "faults_lib.FaultPlan"]] = None,
+        max_job_retries: int = 3,
+        retry_backoff_s: float = 0.1,
+        job_deadline_s: Optional[float] = None,
+        heartbeat_s: Optional[float] = 0.5,
+        heartbeat_timeout_s: Optional[float] = 300.0,
     ):
         self.max_workers = max_workers
         self.objectives = objectives
         self.processes = processes
+        # deterministic fault plan (spec string or FaultPlan); None falls
+        # back to the REPRO_FAULTS env var, which also crosses spawn
+        if isinstance(faults, faults_lib.FaultPlan):
+            faults = faults.spec()
+        self.fault_spec = (
+            faults if faults is not None
+            else os.environ.get(faults_lib.FAULTS_ENV)
+        )
+        # self-healing policy: a failed/crashed job is re-dispatched up to
+        # max_job_retries times with exponential backoff before being
+        # quarantined; job_deadline_s bounds a single attempt's wall clock
+        # (straggler/hang detection); heartbeat_timeout_s bounds worker
+        # silence while a job is in flight
+        self.max_job_retries = max_job_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.job_deadline_s = job_deadline_s
+        self.heartbeat_s = heartbeat_s
+        self.heartbeat_timeout_s = heartbeat_timeout_s
         # keep the spawned worker pool alive across run() calls: follow-up
         # waves (e.g. the transfer scheduler's warm fan-out) reuse the
         # already-imported workers instead of paying the multi-second spawn
@@ -519,16 +622,61 @@ class SearchExecutor:
         if self.processes:
             return self._run_processes(jobs)
         t0 = time.monotonic()
+        # thread mode arms only the shared-process-safe faults (exc/slow/
+        # ckpt/torn): a crash would kill the whole pool, a hang would hang it
+        injector = None
+        plan = faults_lib.FaultPlan.parse(self.fault_spec)
+        runtime = self.runtime
+        if plan:
+            injector = faults_lib.FaultInjector(plan, process=False)
+            if runtime.checkpoint is not None:
+                runtime = dataclasses.replace(
+                    runtime, checkpoint=injector.checkpointer(runtime.checkpoint)
+                )
+
+        def interrupted_now() -> bool:
+            budget = self.runtime.budget
+            return self.stop_token.is_set() or (
+                budget is not None and budget.exhausted
+            )
 
         def run_one(job: SearchJob) -> JobOutcome:
-            with obs_trace.span("job", job=job.name):
+            attempt = 0
+            while True:
+                job_runtime = runtime
+                if injector is not None:
+                    job_runtime = injector.runtime(runtime, job.name, attempt)
                 try:
-                    res = job.fn(**job.kwargs, runtime=self.runtime, tag=job.name)
-                    return JobOutcome(job.name, "done", result=res)
+                    with obs_trace.span("job", job=job.name, attempt=attempt):
+                        res = job.fn(
+                            **job.kwargs, runtime=job_runtime, tag=job.name
+                        )
+                    return JobOutcome(
+                        job.name, "done", result=res, attempts=attempt + 1
+                    )
                 except SearchInterrupted as e:
-                    return JobOutcome(job.name, "interrupted", error=e)
+                    return JobOutcome(
+                        job.name, "interrupted", error=e, attempts=attempt + 1
+                    )
                 except Exception as e:  # noqa: BLE001 - isolate siblings
-                    return JobOutcome(job.name, "error", error=e)
+                    attempt += 1
+                    if interrupted_now() or attempt > self.max_job_retries:
+                        return JobOutcome(
+                            job.name, "error", error=e, attempts=attempt,
+                            quarantined=(
+                                not interrupted_now()
+                                and self.max_job_retries > 0
+                            ),
+                        )
+                    tr = obs_trace.active()
+                    if tr is not None:
+                        tr.instant(
+                            "job_retry", {"job": job.name, "attempt": attempt}
+                        )
+                    time.sleep(self._backoff_s(attempt))
+                finally:
+                    if injector is not None:
+                        injector.after_job(job.name, attempt, self.runtime.store)
 
         with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
             outcomes = list(pool.map(run_one, jobs))
@@ -545,7 +693,20 @@ class SearchExecutor:
             frontier=frontier,
             store_stats=None if store is None else store.stats.as_dict(),
             wall_s=time.monotonic() - t0,
+            recovery={
+                "retries": sum(o.attempts - 1 for o in outcomes),
+                "respawns": 0,
+                "deadline_kills": 0,
+                "heartbeat_kills": 0,
+                "crashes": 0,
+                "quarantined": sum(1 for o in outcomes if o.quarantined),
+            },
         )
+
+    def _backoff_s(self, attempt: int) -> float:
+        """Exponential retry backoff, capped so a late retry never stalls a
+        sweep longer than a couple of seconds."""
+        return min(self.retry_backoff_s * (2.0 ** max(attempt - 1, 0)), 2.0)
 
     # ---- process mode -----------------------------------------------------
 
@@ -572,6 +733,63 @@ class SearchExecutor:
         """Deterministic round-robin partition: job i -> worker i % k."""
         return [jobs[i::k] for i in range(k)]
 
+    @contextlib.contextmanager
+    def _spawn_env(self):
+        """XLA_FLAGS / trace-dir handoff for spawned workers: set the env
+        vars for the children, restore the parent's values right after
+        ``start()`` — initial spawns and slot respawns take the same path."""
+        parent_tracer = obs_trace.active()
+        saved_flags = os.environ.get("XLA_FLAGS")
+        saved_trace = os.environ.get(obs_trace.TRACE_DIR_ENV)
+        if self.devices_per_worker:
+            flag = (
+                f"--xla_force_host_platform_device_count="
+                f"{self.devices_per_worker}"
+            )
+            os.environ["XLA_FLAGS"] = f"{saved_flags} {flag}" if saved_flags else flag
+        if parent_tracer is not None:
+            os.environ[obs_trace.TRACE_DIR_ENV] = str(parent_tracer.dir)
+        try:
+            yield
+        finally:
+            if self.devices_per_worker:
+                if saved_flags is None:
+                    os.environ.pop("XLA_FLAGS", None)
+                else:
+                    os.environ["XLA_FLAGS"] = saved_flags
+            if parent_tracer is not None:
+                if saved_trace is None:
+                    os.environ.pop(obs_trace.TRACE_DIR_ENV, None)
+                else:
+                    os.environ[obs_trace.TRACE_DIR_ENV] = saved_trace
+
+    @staticmethod
+    def _start_slot(pool: _ProcessPool, wid: int) -> None:
+        """Start (or restart) slot ``wid`` on a *fresh* input queue — a
+        message dispatched to the dead incarnation but never read must not
+        leak into the new one. Callers wrap this in ``_spawn_env()``."""
+        in_q = pool.ctx.Queue()
+        pool.in_qs[wid] = in_q
+        p = pool.ctx.Process(
+            target=_process_worker,
+            args=(
+                wid,
+                in_q,
+                pool.store_path,
+                pool.checkpoint_root,
+                pool.checkpoint_every,
+                pool.budget_spec,
+                pool.stop_event,
+                pool.go_event,
+                pool.out_q,
+                pool.fault_spec,
+                pool.heartbeat_s,
+            ),
+            daemon=True,
+        )
+        p.start()
+        pool.procs[wid] = p
+
     def _spawn_pool(self, k: int, store_path: Optional[Path]) -> _ProcessPool:
         """Spawn ``k`` persistent workers (queues, events, shared budget,
         env handoff) — everything that used to happen per ``run()`` now
@@ -590,8 +808,6 @@ class SearchExecutor:
                 except FileNotFoundError:
                     seg_offsets[wid] = 0
         ctx = multiprocessing.get_context("spawn")  # never fork jax state
-        out_q = ctx.Queue()
-        in_qs = [ctx.Queue() for _ in range(k)]
         stop_event = ctx.Event()
         self.stop_token.mirror(stop_event)
         go_event = ctx.Event() if self.sync_start else None
@@ -612,62 +828,27 @@ class SearchExecutor:
         checkpoint_root = (
             None if runtime.checkpoint is None else str(runtime.checkpoint.root)
         )
-        parent_tracer = obs_trace.active()
-        saved_flags = os.environ.get("XLA_FLAGS")
-        if self.devices_per_worker:
-            flag = (
-                f"--xla_force_host_platform_device_count="
-                f"{self.devices_per_worker}"
-            )
-            os.environ["XLA_FLAGS"] = f"{saved_flags} {flag}" if saved_flags else flag
-        # ship trace enablement the same way XLA_FLAGS crosses spawn: set the
-        # env var for the children, restore the parent's value right after
-        saved_trace = os.environ.get(obs_trace.TRACE_DIR_ENV)
-        if parent_tracer is not None:
-            os.environ[obs_trace.TRACE_DIR_ENV] = str(parent_tracer.dir)
-        procs: list = []
-        try:
-            for wid in range(k):
-                p = ctx.Process(
-                    target=_process_worker,
-                    args=(
-                        wid,
-                        in_qs[wid],
-                        store_path,
-                        checkpoint_root,
-                        runtime.checkpoint_every,
-                        budget_spec,
-                        stop_event,
-                        go_event,
-                        out_q,
-                    ),
-                    daemon=True,
-                )
-                p.start()
-                procs.append(p)
-        finally:
-            if self.devices_per_worker:
-                if saved_flags is None:
-                    os.environ.pop("XLA_FLAGS", None)
-                else:
-                    os.environ["XLA_FLAGS"] = saved_flags
-            if parent_tracer is not None:
-                if saved_trace is None:
-                    os.environ.pop(obs_trace.TRACE_DIR_ENV, None)
-                else:
-                    os.environ[obs_trace.TRACE_DIR_ENV] = saved_trace
-        return _ProcessPool(
-            procs=procs,
-            in_qs=in_qs,
-            out_q=out_q,
+        pool = _ProcessPool(
+            procs=[None] * k,
+            in_qs=[None] * k,
+            out_q=ctx.Queue(),
             stop_event=stop_event,
             go_event=go_event,
             budget_spec=budget_spec,
             store_path=store_path,
             k=k,
             t_spawn=t_spawn,
+            ctx=ctx,
+            checkpoint_root=checkpoint_root,
+            checkpoint_every=runtime.checkpoint_every,
+            fault_spec=self.fault_spec,
+            heartbeat_s=self.heartbeat_s,
             seg_offsets=seg_offsets,
         )
+        with self._spawn_env():
+            for wid in range(k):
+                self._start_slot(pool, wid)
+        return pool
 
     def _ensure_pool(self, n_jobs: int, store_path: Optional[Path]) -> tuple:
         """The live pool, respawning after a crash; returns (pool, spawned).
@@ -697,10 +878,9 @@ class SearchExecutor:
         store_path = self._store_path()
         pool, spawned = self._ensure_pool(len(jobs), store_path)
         shards = self._shard(jobs, pool.k)
-        payloads = []
         for wid, shard in enumerate(shards):
             try:
-                payloads.append(pickle.dumps(shard))
+                pickle.dumps(shard)
             except Exception as e:
                 raise ValueError(
                     f"process mode ships jobs by pickle and worker {wid}'s "
@@ -709,47 +889,245 @@ class SearchExecutor:
                     f"pickle provenance) and a picklable backend, or run "
                     f"thread mode (processes=False)"
                 ) from e
-        for wid, payload in enumerate(payloads):
-            pool.in_qs[wid].put(payload)
+        shard_of = {job.name: wid for wid, shard in enumerate(shards) for job in shard}
+        jobs_by_name = {j.name: j for j in jobs}
 
+        # per-slot FIFOs keep the deterministic round-robin layout; jobs a
+        # dead slot leaves behind, and retry-able failures, go through
+        # retry_q and may land on any idle worker (trajectories are
+        # placement-independent, so healing never changes results)
+        slot_q: dict[int, list[SearchJob]] = {
+            wid: list(shard) for wid, shard in enumerate(shards)
+        }
+        retry_q: list[tuple[float, str]] = []  # (monotonic ready-at, job name)
+        attempts: dict[str, int] = {j.name: 0 for j in jobs}  # failed so far
+        inflight: dict[int, dict] = {}  # wid -> {name, attempt, t_start}
         outcomes: dict[str, JobOutcome] = {}
         fatals: dict[int, dict] = {}
-        # every worker must account for its wave shard (empty shards get an
-        # immediate wave_end) — the wave is over when none are pending
-        pending: set[int] = set(range(pool.k))
-        crashed: set[int] = set()
+        dead_slots: set[int] = set()  # slots given up on (fatal/cap/stop)
+        last_hb: dict[int, float] = {
+            wid: time.monotonic() for wid in range(pool.k)
+        }
+        recovery = {
+            "retries": 0,
+            "respawns": 0,
+            "deadline_kills": 0,
+            "heartbeat_kills": 0,
+            "crashes": 0,
+            "quarantined": 0,
+        }
+        # a runaway fault schedule must still terminate: past this many
+        # respawns, remaining jobs fall back to "re-run to resume"
+        max_respawns = self.max_job_retries * len(jobs) + pool.k
+
+        def interrupted_now() -> bool:
+            if self.stop_token.is_set():
+                return True
+            budget = runtime.budget
+            if budget is not None and budget.exhausted:
+                return True
+            spec = pool.budget_spec
+            return spec is not None and bool(spec["exhausted"].value)
+
+        def owner_of(name: str) -> Optional[int]:
+            for wid, info in inflight.items():
+                if info["name"] == name:
+                    return wid
+            return None
+
+        def schedule_retry(name: str, err: BaseException) -> None:
+            """A failed attempt: retry with backoff, or quarantine so one
+            poison job cannot take the sweep down with it."""
+            att = attempts[name] + 1
+            attempts[name] = att
+            if att > self.max_job_retries:
+                recovery["quarantined"] += 1
+                outcomes[name] = JobOutcome(
+                    name,
+                    "error",
+                    error=err,
+                    attempts=att,
+                    quarantined=self.max_job_retries > 0,
+                )
+                return
+            recovery["retries"] += 1
+            retry_q.append((time.monotonic() + self._backoff_s(att), name))
+            if parent_tracer is not None:
+                parent_tracer.instant(
+                    "job_retry", {"job": name, "attempt": att}
+                )
+
+        def account_dead_incarnation(wid: int) -> None:
+            """Fold the dead incarnation's durable segment lines into
+            ``dead_stats`` and advance the offset so the next incarnation's
+            counters start clean (no double counting)."""
+            if store_path is None:
+                return
+            seg = store_path.with_name(f"{store_path.name}{_SEGMENT_INFIX}{wid}")
+            pool.dead_stats.append(
+                _partial_segment_stats(seg, pool.seg_offsets.get(wid, 0))
+            )
+            try:
+                pool.seg_offsets[wid] = seg.stat().st_size
+            except FileNotFoundError:
+                pool.seg_offsets[wid] = 0
+            pool.worker_stats.pop(wid, None)
+
+        def retire_slot(wid: int, err_for_pending: BaseException) -> None:
+            """Give up on a slot: its queued jobs spill to the retry queue
+            if anyone is left to run them, else they report ``err``."""
+            dead_slots.add(wid)
+            spill = [j for j in slot_q[wid] if j.name not in outcomes]
+            slot_q[wid] = []
+            fleet_alive = any(
+                w not in dead_slots and pool.procs[w].is_alive()
+                for w in range(pool.k)
+            )
+            for job in spill:
+                if fleet_alive:
+                    retry_q.append((time.monotonic(), job.name))
+                else:
+                    outcomes[job.name] = JobOutcome(
+                        job.name, "interrupted", error=err_for_pending
+                    )
+
+        def slot_died(wid: int) -> None:
+            p = pool.procs[wid]
+            info = inflight.pop(wid, None)
+            account_dead_incarnation(wid)
+            if wid in fatals:
+                # the worker shipped its own setup/protocol failure: a
+                # respawn would just hit it again — error out its jobs
+                err = WorkerError(
+                    f"{fatals[wid]['repr']}\n{fatals[wid]['traceback']}"
+                )
+                if info is not None and info["name"] not in outcomes:
+                    outcomes[info["name"]] = JobOutcome(
+                        info["name"], "error", error=err,
+                        attempts=attempts[info["name"]] + 1,
+                    )
+                for job in slot_q[wid]:
+                    if job.name not in outcomes:
+                        outcomes[job.name] = JobOutcome(
+                            job.name, "error", error=err
+                        )
+                slot_q[wid] = []
+                dead_slots.add(wid)
+                return
+            recovery["crashes"] += 1
+            crash_err = WorkerCrashed(
+                f"worker {wid} exited (code {p.exitcode}) before finishing "
+                f"its job; its checkpoints and store segment survive — "
+                f"re-run to resume"
+            )
+            if interrupted_now():
+                # budget/stop is taking the run down: keep the pre-healing
+                # contract (interrupted outcome, resumable by a re-run)
+                if info is not None and info["name"] not in outcomes:
+                    outcomes[info["name"]] = JobOutcome(
+                        info["name"], "interrupted", error=crash_err,
+                        attempts=attempts[info["name"]] + 1,
+                    )
+                retire_slot(wid, crash_err)
+                return
+            if info is not None and info["name"] not in outcomes:
+                schedule_retry(info["name"], crash_err)
+            if (
+                recovery["respawns"] >= max_respawns
+                or len(outcomes) >= len(jobs)
+            ):
+                retire_slot(wid, crash_err)
+                return
+            # heal the slot: a fresh incarnation takes over the worker id
+            # (and with it the single-writer segment), resuming retried
+            # jobs from their surviving checkpoints
+            with self._spawn_env():
+                self._start_slot(pool, wid)
+            pool.ready.discard(wid)
+            last_hb[wid] = time.monotonic()
+            recovery["respawns"] += 1
+            if parent_tracer is not None:
+                parent_tracer.instant("worker_respawn", {"worker": wid})
+
+        def kill_slot(wid: int, why: str, counter: str) -> None:
+            """Hung/straggling worker: kill it dead *before* the slot is
+            respawned so the old incarnation can never write to the segment
+            again (single-writer stays true), then let the death path heal."""
+            recovery[counter] += 1
+            if parent_tracer is not None:
+                parent_tracer.instant(
+                    "worker_kill", {"worker": wid, "why": why}
+                )
+            p = pool.procs[wid]
+            kill = getattr(p, "kill", p.terminate)
+            kill()
+            p.join(timeout=10.0)
 
         def handle(kind: str, who, payload) -> None:
+            now = time.monotonic()
             if kind == "ready":
                 pool.ready.add(who)
+                last_hb[who] = now
+            elif kind == "hb":
+                last_hb[who] = now
+            elif kind == "start":
+                last_hb[who] = now
+                info = inflight.get(who)
+                if info is not None and info["name"] == payload["job"]:
+                    info["t_start"] = now
             elif kind == "done":
+                wid = owner_of(who)
+                if wid is not None:
+                    inflight.pop(wid)
                 outcomes[who] = JobOutcome(
-                    who, "done", result=result_from_state(payload, None)
+                    who,
+                    "done",
+                    result=result_from_state(payload, None),
+                    attempts=attempts.get(who, 0) + 1,
                 )
             elif kind == "interrupted":
+                wid = owner_of(who)
+                if wid is not None:
+                    inflight.pop(wid)
                 outcomes[who] = JobOutcome(
                     who,
                     "interrupted",
                     error=SearchInterrupted(
                         payload["tag"], payload["samples_done"], payload["samples"]
                     ),
+                    attempts=attempts.get(who, 0) + 1,
                 )
             elif kind == "error":
-                outcomes[who] = JobOutcome(
-                    who,
-                    "error",
-                    error=WorkerError(f"{payload['repr']}\n{payload['traceback']}"),
-                )
+                wid = owner_of(who)
+                if wid is not None:
+                    inflight.pop(wid)
+                err = WorkerError(f"{payload['repr']}\n{payload['traceback']}")
+                if interrupted_now():
+                    outcomes[who] = JobOutcome(
+                        who, "error", error=err,
+                        attempts=attempts.get(who, 0) + 1,
+                    )
+                else:
+                    schedule_retry(who, err)
             elif kind == "wave_end":
                 pool.worker_stats[who] = payload
-                pending.discard(who)
             elif kind == "fatal":
                 fatals[who] = payload
-                pending.discard(who)  # its main loop is gone; no wave_end
 
-        # drain while the wave runs: a worker's queue put must never block on
-        # a full pipe because the parent is waiting for the wave to end
-        while pending:
+        def next_for(wid: int) -> Optional[SearchJob]:
+            while slot_q[wid]:
+                job = slot_q[wid].pop(0)
+                if job.name not in outcomes:
+                    return job
+            now = time.monotonic()
+            for i, (ready_at, name) in enumerate(retry_q):
+                if ready_at <= now and name not in outcomes:
+                    del retry_q[i]
+                    return jobs_by_name[name]
+            return None
+
+        while len(outcomes) < len(jobs):
+            now = time.monotonic()
             go_event = pool.go_event
             if go_event is not None and not go_event.is_set():
                 if pool.spawn_s is None and len(pool.ready) >= pool.k:
@@ -761,24 +1139,116 @@ class SearchExecutor:
                     go_event.set()
                 elif not any(p.is_alive() for p in pool.procs):
                     go_event.set()  # never gate survivors on a dead worker
+            # dispatch: at most one in-flight job per live worker
+            for wid in range(pool.k):
+                if wid in dead_slots or wid in inflight:
+                    continue
+                if not pool.procs[wid].is_alive():
+                    continue  # the death scan below handles it
+                nxt = next_for(wid)
+                if nxt is None:
+                    continue
+                att = attempts[nxt.name]
+                pool.in_qs[wid].put(("job", pickle.dumps((nxt, att))))
+                inflight[wid] = {
+                    "name": nxt.name,
+                    "attempt": att,
+                    "t_disp": now,
+                    "t_start": None,
+                }
+            # drain: a worker's put must never block on a full pipe while
+            # the parent waits
             try:
-                handle(*pool.out_q.get(timeout=0.1))
-                continue
+                while True:
+                    handle(*pool.out_q.get(timeout=0.05))
             except queue_lib.Empty:
                 pass
-            for wid in sorted(pending):
-                if not pool.procs[wid].is_alive():
-                    # drain anything the worker flushed before dying (its
-                    # wave_end may still be buffered in the pipe)
+            # death scan (kill_slot victims land here too)
+            for wid in range(pool.k):
+                if wid in dead_slots or pool.procs[wid].is_alive():
+                    continue
+                # drain anything it flushed before dying first — a buffered
+                # "done" beats a crash re-dispatch
+                try:
                     while True:
-                        try:
-                            handle(*pool.out_q.get(timeout=0.2))
-                        except queue_lib.Empty:
-                            break
-                    if wid in pending:
-                        pending.discard(wid)
-                        crashed.add(wid)
-        if crashed or fatals:
+                        handle(*pool.out_q.get(timeout=0.2))
+                except queue_lib.Empty:
+                    pass
+                if wid in dead_slots or pool.procs[wid].is_alive():
+                    continue
+                slot_died(wid)
+            # straggler detection: a job past its deadline forfeits the
+            # worker (the job itself is retried on a fresh incarnation)
+            if self.job_deadline_s is not None:
+                for wid, info in list(inflight.items()):
+                    if wid in dead_slots or not pool.procs[wid].is_alive():
+                        continue
+                    t_start = info.get("t_start")
+                    if t_start is None:
+                        continue  # deadline clock starts at the ack
+                    if now - t_start > self.job_deadline_s:
+                        kill_slot(
+                            wid,
+                            f"job {info['name']!r} over deadline "
+                            f"{self.job_deadline_s}s",
+                            "deadline_kills",
+                        )
+            # heartbeat timeout: a busy worker gone silent is hung even if
+            # the kernel still counts it alive
+            if self.heartbeat_s and self.heartbeat_timeout_s:
+                for wid in list(inflight):
+                    if (
+                        wid in dead_slots
+                        or wid not in pool.ready
+                        or not pool.procs[wid].is_alive()
+                    ):
+                        continue
+                    if now - last_hb[wid] > self.heartbeat_timeout_s:
+                        kill_slot(wid, "heartbeat timeout", "heartbeat_kills")
+            if all(
+                wid in dead_slots or not pool.procs[wid].is_alive()
+                for wid in range(pool.k)
+            ) and len(outcomes) < len(jobs):
+                # whole fleet gone and not coming back: the remaining jobs
+                # keep the pre-healing resumable contract
+                for name in attempts:
+                    if name not in outcomes:
+                        outcomes[name] = JobOutcome(
+                            name,
+                            "interrupted",
+                            error=WorkerCrashed(
+                                f"worker fleet lost before finishing "
+                                f"{name!r}; checkpoints and store segments "
+                                f"survive — re-run to resume"
+                            ),
+                        )
+                break
+
+        # wave boundary: collect cumulative counters from the live fleet
+        live = [
+            wid
+            for wid in range(pool.k)
+            if wid not in dead_slots and pool.procs[wid].is_alive()
+        ]
+        for wid in live:
+            try:
+                pool.in_qs[wid].put(("wave_end", None))
+            except Exception:  # noqa: BLE001 - queue may be broken post-crash
+                pass
+        waiting = set(live)
+        wave_deadline = time.monotonic() + 30.0
+        while waiting and time.monotonic() < wave_deadline:
+            try:
+                kind, who, payload = pool.out_q.get(timeout=0.2)
+            except queue_lib.Empty:
+                for wid in list(waiting):
+                    if not pool.procs[wid].is_alive():
+                        waiting.discard(wid)
+                continue
+            handle(kind, who, payload)
+            if kind in ("wave_end", "fatal"):
+                waiting.discard(who)
+        if fatals or dead_slots:
             pool.broken = True  # next run() respawns a clean fleet
         spawn_s = pool.spawn_s if spawned else None
 
@@ -789,31 +1259,6 @@ class SearchExecutor:
             with budget._lock:
                 budget._granted = int(pool.budget_spec["granted"].value)
                 budget.exhausted = bool(pool.budget_spec["exhausted"].value)
-
-        shard_of = {job.name: wid for wid, shard in enumerate(shards) for job in shard}
-        for wid, shard in enumerate(shards):
-            for job in shard:
-                if job.name in outcomes:
-                    continue
-                if wid in fatals:
-                    outcomes[job.name] = JobOutcome(
-                        job.name,
-                        "error",
-                        error=WorkerError(
-                            f"{fatals[wid]['repr']}\n{fatals[wid]['traceback']}"
-                        ),
-                    )
-                else:
-                    outcomes[job.name] = JobOutcome(
-                        job.name,
-                        "interrupted",
-                        error=WorkerCrashed(
-                            f"worker {wid} exited "
-                            f"(code {pool.procs[wid].exitcode}) "
-                            f"before finishing {job.name!r}; its checkpoints "
-                            f"and store segment survive — re-run to resume"
-                        ),
-                    )
 
         frontier = ParetoFrontier(self.objectives)
         for name in (j.name for j in jobs):
@@ -826,17 +1271,19 @@ class SearchExecutor:
         if store is not None:
             store.refresh()  # log shipping: fold worker segments into memory
             store.flush()
-            # counters are cumulative since pool spawn: take each worker's
-            # latest wave_end snapshot; for a worker that died (its memory
-            # counters are gone) count the complete lines it durably appended
-            # past the spawn offset instead, tagged partial_workers
-            stats_list = []
+            # counters are cumulative since (re)spawn: every dead
+            # incarnation was reconstructed from its durable segment lines
+            # into dead_stats when it died; live slots contribute their
+            # latest wave_end snapshot (or a reconstruction if it never
+            # shipped one)
+            stats_list = list(pool.dead_stats)
             for wid in range(pool.k):
-                dead = wid in crashed or wid in fatals
+                if wid in dead_slots:
+                    continue  # fully accounted in dead_stats
                 snap = pool.worker_stats.get(wid)
-                if not dead and snap is not None:
+                if snap is not None:
                     stats_list.append(snap)
-                elif dead or snap is None:
+                else:
                     stats_list.append(
                         _partial_segment_stats(
                             store_path.with_name(
@@ -857,6 +1304,7 @@ class SearchExecutor:
             wall_s=time.monotonic() - t0,
             spawn_s=spawn_s,
             shards=shard_of,
+            recovery=recovery,
         )
         if not self.persistent:
             self.close()

@@ -113,6 +113,10 @@ class DurableRecordStore(RecordStore):
         self.segment = None if segment is None else str(segment)
         self.loaded = 0          # entries rehydrated from the log(s) on open
         self.loaded_dropped = 0  # corrupt / torn lines skipped
+        # of loaded_dropped: corrupt *interior* lines (valid records follow
+        # them) — distinguishes bit rot / torn mid-log writes from the
+        # benign torn tail a killed writer leaves
+        self.corrupt_interior = 0
         self.shipped = 0         # entries folded in by refresh() after load
         self.appended = 0        # lines this process appended
         self._file = None
@@ -181,8 +185,10 @@ class DurableRecordStore(RecordStore):
                 raw, writer = ent["r"], ent.get("w")
             except (ValueError, KeyError, TypeError):
                 # torn/corrupt interior line (or stray bytes): skip, keep
-                # everything that parsed
+                # everything that parsed — corruption must never truncate
+                # the valid tail behind it
                 self.loaded_dropped += 1
+                self.corrupt_interior += 1
                 continue
             if key not in self._data:
                 fresh += 1

@@ -18,9 +18,14 @@ Pareto frontier contains a best record for every monotone scalarization.
 
 Admissions are deduplicated on the canonicalized scenario (targets + mode):
 concurrent queries for the same envelope share one search, and a scenario
-already searched once is never searched again in this controller's lifetime
-(the fold made whatever is achievable available; if it is still infeasible,
-the envelope is simply not reachable and the best-effort answer stands).
+searched *successfully* once is never searched again in this controller's
+lifetime (the fold made whatever is achievable available; if it is still
+infeasible, the envelope is simply not reachable and the best-effort answer
+stands). A *failed* search — a transient worker error, a dying store — does
+not poison the scenario: the in-flight slot is released, the failure is
+counted (``failed``), and the next query for the envelope retries, up to
+``AdmissionConfig.max_attempts`` failures before the scenario is marked
+exhausted.
 
 Searches run on a private thread pool so ``query`` returns immediately with
 the current best-effort answer plus the admission status; ``wait`` blocks
@@ -51,6 +56,7 @@ class AdmissionConfig:
     driver: str = "joint"      # any repro.core.sweep driver
     controller: str = "reinforce"
     max_concurrent: int = 2    # background searches in flight at once
+    max_attempts: int = 3      # failed searches tolerated before "exhausted"
 
     def search_config(self) -> SearchConfig:
         # search samples == budget tokens, so admitted searches finish inside
@@ -112,11 +118,13 @@ class AdmissionController:
         self._lock = threading.Lock()
         self._inflight: dict[tuple, Future] = {}
         self._searched: set[tuple] = set()
+        self._failures: dict[tuple, int] = {}  # failed attempts per scenario
         self._pool = ThreadPoolExecutor(
             max_workers=cfg.max_concurrent,
             thread_name_prefix="admission",
         )
         self.admitted = 0  # background searches actually launched
+        self.failed = 0    # launched searches that raised (slot released)
 
     # ---- policy ------------------------------------------------------------
 
@@ -150,22 +158,53 @@ class AdmissionController:
             sp.set(status="searching")
             adm = Admission(scenario, "searching", answer, future=fut)
             if wait:
-                fut.result()
+                try:
+                    fut.result()
+                except Exception:  # noqa: BLE001 - failed search: slot was
+                    # released in _search_and_fold; the next query retries
+                    # (or sees "exhausted") — the best-effort answer stands
+                    with self._lock:
+                        if key in self._searched:
+                            adm.status = "exhausted"
                 adm.answer = self.server.answer(scenario)
             return adm
 
     # ---- background search ---------------------------------------------------
 
     def _search_and_fold(self, scenario, key: tuple) -> int:
+        """Run one admitted search. Success retires the scenario for good
+        (``_searched``); a raised search only releases the in-flight slot and
+        counts the failure, so the next query retries — until
+        ``cfg.max_attempts`` failures exhaust the scenario."""
+        ok = False
         try:
             with obs_trace.span(
                 "admission_search", scenario=getattr(scenario, "name", None)
             ):
-                return self._run_search(scenario)
+                folded = self._run_search(scenario)
+            ok = True
+            return folded
         finally:
             with self._lock:
-                self._searched.add(key)
                 self._inflight.pop(key, None)
+                if ok:
+                    self._searched.add(key)
+                    self._failures.pop(key, None)
+                else:
+                    self.failed += 1
+                    n = self._failures[key] = self._failures.get(key, 0) + 1
+                    if n >= self.cfg.max_attempts:
+                        self._searched.add(key)
+                    tr = obs_trace.active()
+                    if tr is not None:
+                        tr.instant(
+                            "admission_search_failed",
+                            {
+                                "scenario": getattr(scenario, "name", None),
+                                "attempt": n,
+                                "exhausted": key in self._searched,
+                            },
+                        )
 
     def _run_search(self, scenario) -> int:
         jobs = scenario_jobs(
@@ -180,6 +219,9 @@ class AdmissionController:
             store=self.store,
             max_workers=1,
             budget=Budget(max_samples=self.cfg.budget_samples),
+            # no inner job retries: admission already retries at query
+            # granularity (``max_attempts``); nesting would multiply attempts
+            max_job_retries=0,
         )
         report = executor.run(jobs)
         for outcome in report.outcomes.values():

@@ -264,8 +264,10 @@ class FrontierServer:
     # ---- constructors ------------------------------------------------------
 
     @classmethod
-    def from_snapshot(cls, path, verify: bool = False, **kw) -> "FrontierServer":
-        """Serve a compacted snapshot artifact (``repro.serve.snapshot``)."""
+    def from_snapshot(cls, path, verify: bool = True, **kw) -> "FrontierServer":
+        """Serve a compacted snapshot artifact (``repro.serve.snapshot``).
+        Verifies the payload digest by default — a serve tier should refuse
+        a silently-corrupt artifact; pass ``verify=False`` to trust it."""
         from repro.serve.snapshot import load_snapshot
 
         return cls(load_snapshot(path, verify=verify).frontier(), **kw)

@@ -272,34 +272,81 @@ def _jobs():
     )
 
 
-def test_kill_one_worker_then_resume_then_zero_resim(tmp_path, monkeypatch):
-    """Worker 1 is killed mid-shard (os._exit, no cleanup). Its finished
-    work survives in its segment + checkpoints; a resume run completes only
-    the remainder; a third run re-simulates nothing at all."""
+def test_kill_one_worker_heals_in_one_invocation_then_zero_resim(
+    tmp_path, monkeypatch
+):
+    """Worker 1 keeps dying mid-shard (os._exit after 2 admits, no cleanup).
+    The executor respawns the slot and re-dispatches the interrupted jobs,
+    which resume from the dead incarnations' checkpoints — the sweep
+    completes in ONE invocation, no manual re-run. A follow-up run then
+    re-simulates nothing at all."""
     monkeypatch.setenv(SELFKILL_ENV, "1:2")  # worker 1 dies after 2 admits
     report = _executor(tmp_path).run(_jobs())
-    crashed = [
-        n for n, o in report.outcomes.items()
-        if o.status == "interrupted" and isinstance(o.error, WorkerCrashed)
-    ]
-    assert crashed, "self-kill hook did not fire"
-    done_first = set(report.done)
+    assert sorted(report.done) == sorted(f"sweep.{s}" for s in SCENARIOS)
+    assert not report.quarantined
+    rec = report.recovery
+    assert rec["crashes"] >= 1 and rec["respawns"] >= 1
+    assert rec["retries"] >= 1
 
     monkeypatch.delenv(SELFKILL_ENV)
-    resume = _executor(tmp_path).run(_jobs())
-    assert sorted(resume.done) == sorted(f"sweep.{s}" for s in SCENARIOS)
-    # scenarios the dead worker finished pre-crash replay from checkpoints
-    assert done_first <= set(resume.done)
-
-    third = _executor(tmp_path).run(_jobs())
-    assert sorted(third.done) == sorted(resume.done)
-    assert third.store_stats["puts"] == 0  # zero re-simulation
-    assert third.store_stats["appended"] == 0
-    for name in third.done:
+    second = _executor(tmp_path).run(_jobs())
+    assert sorted(second.done) == sorted(report.done)
+    assert second.store_stats["puts"] == 0  # zero re-simulation
+    assert second.store_stats["appended"] == 0
+    for name in second.done:
+        # healed results replay bitwise — retries resumed, never diverged
         assert (
-            third.outcomes[name].result.history
-            == resume.outcomes[name].result.history
+            second.outcomes[name].result.history
+            == report.outcomes[name].result.history
         )
+    assert second.recovery["crashes"] == 0
+
+
+def test_healed_run_matches_fault_free_winners(tmp_path, monkeypatch):
+    """The recovery invariant: a chaos schedule (injected crash + transient
+    exception) must not change any per-scenario winner vs a fault-free run
+    of the same sweep."""
+    clean = _executor(tmp_path / "clean").run(_jobs())
+    assert sorted(clean.done) == sorted(f"sweep.{s}" for s in SCENARIOS)
+
+    plan = (
+        "crash:sweep.edge-sku-nano:0:1;"
+        "exc:sweep.lat-0.8ms:1:1"
+    )
+    monkeypatch.setenv("REPRO_FAULTS", plan)
+    chaos = _executor(tmp_path / "chaos").run(_jobs())
+    assert sorted(chaos.done) == sorted(clean.done)
+    assert chaos.recovery["retries"] >= 2
+    for name in clean.done:
+        assert (
+            chaos.outcomes[name].result.history
+            == clean.outcomes[name].result.history
+        ), name
+
+
+def test_poison_job_is_quarantined_not_fatal(tmp_path, monkeypatch):
+    """A job that crashes its worker on every attempt is given up on after
+    max_job_retries; every other job still completes in the same
+    invocation."""
+    victim = "sweep.lat-0.3ms"
+    monkeypatch.setenv(
+        "REPRO_FAULTS",
+        f"crash:{victim}:0:0;crash:{victim}:1:0",  # die at the job boundary
+    )
+    ex = SearchExecutor(
+        store=DurableRecordStore(tmp_path / "s.jsonl"),
+        checkpoint=Checkpointer(tmp_path / "ck"),
+        max_workers=2,
+        processes=True,
+        max_job_retries=1,
+    )
+    report = ex.run(_jobs())
+    assert report.quarantined == [victim]
+    assert isinstance(report.outcomes[victim].error, WorkerCrashed)
+    assert report.outcomes[victim].attempts == 2
+    survivors = sorted(f"sweep.{s}" for s in SCENARIOS if s != "lat-0.3ms")
+    assert sorted(report.done) == survivors
+    assert report.recovery["quarantined"] == 1
 
 
 def test_shared_budget_interrupts_across_processes(tmp_path):
@@ -399,16 +446,19 @@ def test_two_worker_counters_keep_serial_invariants(tmp_path):
 
 
 def test_killed_worker_partial_counters_still_folded(tmp_path, monkeypatch):
-    """A killed worker never ships its exit stats; its durable segment
+    """A killed incarnation never ships its exit stats; its durable segment
     lines are reconstructed into a partial record (tagged partial_workers)
-    and folded, so the report still accounts for every appended record."""
+    and folded alongside the live fleet's snapshots, so the report still
+    accounts for every appended record — one reconstruction per death."""
     monkeypatch.setenv(SELFKILL_ENV, "1:2")
     report = _executor(tmp_path).run(_jobs())
     st = report.store_stats
-    assert st["partial_workers"] == 1
-    assert st["workers"] == 2  # the clean worker + the reconstruction
+    deaths = report.recovery["crashes"]
+    assert deaths >= 1
+    assert st["partial_workers"] == deaths
+    assert st["workers"] == 2 + deaths  # live slots + one per reconstruction
     assert st["puts"] > 0 and st["appended"] > 0
-    # the reconstructed puts are exactly the dead worker's segment lines
+    # every line in the dead worker's segment is accounted exactly once
     seg = tmp_path / "s.jsonl.worker-1"
     lines = seg.read_bytes().count(b"\n") if seg.exists() else 0
     live_puts = st["puts"] - lines
